@@ -1,0 +1,55 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig6_parallelism]
+
+Prints ``name,us_per_call,derived`` CSV rows where timing applies, a
+validation summary against the paper's claims, and writes
+results/benchmarks.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+from benchmarks.paper_tables import ALL  # noqa: E402
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only")
+    args = ap.parse_args()
+
+    out = {}
+    n_ok = n_fail = 0
+    for name, fn in ALL.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        rows, checks = fn()
+        dt = (time.perf_counter() - t0) * 1e6
+        out[name] = {"rows": rows,
+                     "checks": [{"name": c, "ok": ok, "detail": d}
+                                for c, ok, d in checks]}
+        print(f"{name},{dt:.0f},rows={len(rows)}")
+        for c, ok, d in checks:
+            mark = "PASS" if ok else "FAIL"
+            n_ok += ok
+            n_fail += not ok
+            print(f"  [{mark}] {c}: {d}")
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "benchmarks.json").write_text(json.dumps(out, indent=1,
+                                                        default=str))
+    print(f"\n{n_ok} checks passed, {n_fail} failed "
+          f"-> results/benchmarks.json")
+    if n_fail:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

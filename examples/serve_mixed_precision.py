@@ -1,0 +1,79 @@
+"""End-to-end driver: mixed-precision LLM serving with batched requests.
+
+This is the system the paper targets — a quantized checkpoint (projections
+and experts in INT4/FP8/FP4 packed codes -> XtraMAC-style MACs; attention
+BF16) served with a prefill+decode engine over a KV cache.  Uses the
+reduced qwen3-moe config so it runs on the CPU container in ~a minute;
+pass --arch/--full to scale up.
+
+Run:  PYTHONPATH=src python examples/serve_mixed_precision.py
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.common import QuantMaker
+from repro.models import transformer as T
+from repro.serve import ServeConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=not args.full)
+    print(f"== {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+          f"({cfg.family}); schemes proj={cfg.scheme_proj} "
+          f"ffn={cfg.scheme_ffn}")
+    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0), plan={}))
+
+    # count packed vs dense parameter bytes — the paper's memory win
+    import jax.numpy as jnp
+    from repro.models.common import QLinear
+    packed_bytes = dense_equiv = 0.0
+    for leaf in jax.tree_util.tree_flatten(
+            params, is_leaf=lambda x: isinstance(x, QLinear))[0]:
+        if isinstance(leaf, QLinear):
+            stack = leaf.packed.shape[: leaf.packed.ndim - 2]
+            n_stack = int(np.prod(stack)) if stack else 1
+            packed_bytes += (leaf.packed.size * leaf.packed.dtype.itemsize
+                             + leaf.scales.size * 4)
+            dense_equiv += n_stack * leaf.shape[0] * leaf.shape[1] * 2
+        else:
+            b = leaf.size * leaf.dtype.itemsize
+            packed_bytes += b
+            dense_equiv += leaf.size * 2
+    print(f"checkpoint bytes: {packed_bytes/1e6:.2f} MB packed "
+          f"(bf16-dense equivalent {dense_equiv/1e6:.2f} MB -> "
+          f"{dense_equiv/packed_bytes:.2f}x smaller)")
+
+    engine = ServingEngine(cfg, params, ServeConfig(
+        max_len=args.prompt_len + args.max_new))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(
+        1, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.full((args.batch, cfg.n_patches, cfg.d_model),
+                                    0.02, jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.full((args.batch, cfg.n_frames, cfg.d_model),
+                                   0.02, jnp.bfloat16)
+
+    t0 = time.time()
+    out = engine.generate(batch, max_new_tokens=args.max_new)
+    dt = time.time() - t0
+    print(f"generated [{out['batch']} x {out['generated'].shape[1]}] tokens "
+          f"in {dt:.1f}s (incl. compile)")
+    print("sampled continuation ids:", out["generated"][0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Fault-tolerant training demo: train a reduced model, kill it mid-run,
+resume from the checkpoint, and verify the loss trajectory is bit-identical
+to an uninterrupted run (deterministic data + deterministic optimizer).
+
+Run:  PYTHONPATH=src python examples/train_with_failures.py
+"""
+import shutil
+import tempfile
+
+from repro.launch.train import train
+
+STEPS, ARCH = 24, "granite-8b"
+
+
+def main():
+    d1 = tempfile.mkdtemp(prefix="ckpt_ref_")
+    d2 = tempfile.mkdtemp(prefix="ckpt_ft_")
+    try:
+        print("== reference run (no failures)")
+        ref = train(ARCH, smoke=True, steps=STEPS, batch_size=4, seq_len=64,
+                    ckpt_dir=d1, ckpt_every=8, log_every=8)
+
+        print("\n== run with a simulated failure at step 13")
+        try:
+            train(ARCH, smoke=True, steps=STEPS, batch_size=4, seq_len=64,
+                  ckpt_dir=d2, ckpt_every=8, log_every=8, fail_at=13)
+        except RuntimeError as e:
+            print(f"   crashed as planned: {e}")
+
+        print("\n== restart: resumes from the last checkpoint")
+        res = train(ARCH, smoke=True, steps=STEPS, batch_size=4, seq_len=64,
+                    ckpt_dir=d2, ckpt_every=8, log_every=8)
+
+        drift = abs(ref["final_loss"] - res["final_loss"])
+        print(f"\nfinal loss: reference {ref['final_loss']:.6f} vs "
+              f"resumed {res['final_loss']:.6f} (|drift| {drift:.2e})")
+        assert drift < 1e-5, "resume must be deterministic"
+        print("fault-tolerant resume verified.")
+    finally:
+        shutil.rmtree(d1, ignore_errors=True)
+        shutil.rmtree(d2, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

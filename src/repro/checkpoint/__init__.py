@@ -1,0 +1,5 @@
+from .store import (CheckpointManager, latest_step, load_checkpoint,
+                    save_checkpoint)
+
+__all__ = ["CheckpointManager", "latest_step", "load_checkpoint",
+           "save_checkpoint"]

@@ -1,0 +1,43 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each module exposes FULL (the exact assigned config) and SMOKE (a reduced
+same-family config for CPU tests).  ``get_config(name, smoke=...)``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.transformer import ModelConfig
+
+from .shapes import SHAPES, ShapeSpec, input_specs, shape_applicable  # noqa: F401
+
+_ARCH_MODULES: Dict[str, str] = {
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "xlstm-350m": "xlstm_350m",
+    "zamba2-7b": "zamba2_7b",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "minitron-8b": "minitron_8b",
+    "granite-8b": "granite_8b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "starcoder2-15b": "starcoder2_15b",
+    "whisper-medium": "whisper_medium",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+
+def get_config(name: str, *, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.FULL
+
+
+def all_cells():
+    """Every (arch, shape) pair with its skip reason (None = runs)."""
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            cells.append((arch, shape.name, shape_applicable(cfg, shape)))
+    return cells

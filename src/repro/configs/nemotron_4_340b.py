@@ -1,0 +1,27 @@
+"""nemotron-4-340b [dense] — 96L d_model=18432 96H (GQA kv=8) d_ff=73728
+vocab=256000.  Squared-ReLU, non-gated FFN.  [arXiv:2402.16819]
+
+Memory posture (DESIGN.md §6): fp32 Adam moments do NOT fit 256 x 16 GB
+(340e9 x 14 B / 256 = 18.6 GB/chip); the training config therefore uses
+bf16 params + bf16 moments (~8 B/param -> 10.6 GB/chip) with full remat.
+Quantization plan: MXFP4 (FP4xBF16+BF16 MACs) for serving.
+"""
+from repro.models.transformer import ModelConfig
+
+FULL = ModelConfig(
+    name="nemotron-4-340b", family="dense",
+    n_layers=96, d_model=18_432, n_heads=96, n_kv_heads=8, d_head=192,
+    d_ff=73_728, vocab=256_000,
+    activation="relu2", gated_ffn=False, tie_embeddings=False,
+    scheme_proj="mxfp4", scheme_ffn="mxfp4",
+    microbatches=8,
+)
+
+SMOKE = ModelConfig(
+    name="nemotron-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+    d_ff=256, vocab=512,
+    activation="relu2", gated_ffn=False, tie_embeddings=False,
+    scheme_proj="mxfp4", scheme_ffn="mxfp4",
+    kv_chunk=64,
+)

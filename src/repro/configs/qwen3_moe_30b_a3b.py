@@ -1,0 +1,27 @@
+"""qwen3-moe-30b-a3b [moe] — 48L d_model=2048 32H (GQA kv=4) d_ff=768
+vocab=151936, MoE 128 experts top-8.  [hf:Qwen/Qwen3-30B-A3B]
+
+Quantization plan (paper Fig. 1, Qwen3-AWQ): expert/projection weights
+AWQ-style INT4 -> INT4xBF16+BF16 MACs; attention MACs BF16xBF16+BF16.
+"""
+from repro.models.transformer import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4, d_head=64,
+    d_ff=768, vocab=151_936,
+    n_experts=128, top_k=8, moe_d_ff=768,
+    activation="silu", gated_ffn=True, tie_embeddings=False,
+    scheme_proj="awq_int4", scheme_ffn="awq_int4",
+    microbatches=2,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-moe-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+    d_ff=96, vocab=512,
+    n_experts=8, top_k=2, moe_d_ff=96,
+    activation="silu", gated_ffn=True, tie_embeddings=False,
+    scheme_proj="awq_int4", scheme_ffn="awq_int4",
+    ssm_chunk=16, kv_chunk=64,
+)

@@ -1,0 +1,95 @@
+"""Assigned input shapes and abstract input specs for the dry-run.
+
+Four shapes per LM architecture (seq_len x global_batch):
+  train_4k     4,096 x 256    training       -> lowers train_step
+  prefill_32k  32,768 x 32    inference      -> lowers serve prefill
+  decode_32k   32,768 x 128   inference      -> lowers serve_step (1 token,
+                                               KV cache of seq_len)
+  long_500k    524,288 x 1    long-context   -> serve_step; ONLY for the
+                                               sub-quadratic families
+                                               (ssm/hybrid) — full-attention
+                                               archs skip it (DESIGN.md §4)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, zero allocation) — the dry-run lowers
+against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig, init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str   # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the reason it is skipped."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("full softmax attention over a 524k KV would be a pure "
+                "KV-memory exercise; skipped per DESIGN.md §4 (runs for "
+                "ssm/hybrid families)")
+    return None
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _bf16(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    """Abstract model inputs for one (arch x shape) cell.
+
+    train:   {'tokens', 'labels'} (+ 'patches' / 'frames' stubs)
+    prefill: {'tokens'} (+ stubs) + zeroed cache of size seq_len
+    decode:  {'tokens' [B,1]} + cache of size seq_len + index scalar
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {"tokens": _i32((b, s)), "labels": _i32((b, s))}
+        if cfg.family == "vlm":
+            s_text = s - cfg.n_patches
+            batch = {"tokens": _i32((b, s_text)), "labels": _i32((b, s_text)),
+                     "patches": _bf16((b, cfg.n_patches, cfg.d_model))}
+        elif cfg.family == "audio":
+            batch["frames"] = _bf16((b, cfg.n_frames, cfg.d_model))
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        batch = {"tokens": _i32((b, s))}
+        if cfg.family == "vlm":
+            batch = {"tokens": _i32((b, s - cfg.n_patches)),
+                     "patches": _bf16((b, cfg.n_patches, cfg.d_model))}
+        elif cfg.family == "audio":
+            batch["frames"] = _bf16((b, cfg.n_frames, cfg.d_model))
+        cache = init_cache(cfg, b, s, abstract=True)
+        return {"batch": batch, "cache": cache}
+
+    # decode: one new token against a cache of seq_len
+    batch = {"tokens": _i32((b, 1))}
+    if cfg.family == "audio":
+        batch["frames"] = _bf16((b, cfg.n_frames, cfg.d_model))  # enc cached
+    cache = init_cache(cfg, b, s, abstract=True)
+    return {"batch": batch, "cache": cache,
+            "index": jax.ShapeDtypeStruct((), jnp.int32)}

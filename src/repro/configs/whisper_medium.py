@@ -1,0 +1,34 @@
+"""whisper-medium [audio] — enc-dec, 24 encoder + 24 decoder layers,
+d_model=1024 16H d_ff=4096 vocab=51865.  Conv frontend is a STUB:
+input_specs provides precomputed frame embeddings [B, 1500, d_model].
+[arXiv:2212.04356]
+
+Decode shapes exercise the DECODER (self-attn KV cache + cross-attention
+over the cached encoder output).  The 32k decode length far exceeds the
+released model's 448 decoder positions — the config is a shape/sharding
+exercise, noted in DESIGN.md §6.  Quantization plan: W8A8.
+"""
+from repro.models.transformer import ModelConfig
+
+FULL = ModelConfig(
+    name="whisper-medium", family="audio",
+    n_layers=48, encoder_layers=24,    # 24 enc + 24 dec
+    d_model=1024, n_heads=16, n_kv_heads=16, d_head=64,
+    d_ff=4096, vocab=51_865,
+    n_frames=1500,
+    activation="gelu", gated_ffn=False, norm="layer",
+    use_rope=False, tie_embeddings=True,
+    scheme_proj="w8a8", scheme_ffn="w8a8",
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke", family="audio",
+    n_layers=4, encoder_layers=2,
+    d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+    d_ff=128, vocab=512,
+    n_frames=8,
+    activation="gelu", gated_ffn=False, norm="layer",
+    use_rope=False, tie_embeddings=True,
+    scheme_proj="w8a8", scheme_ffn="w8a8",
+    kv_chunk=64,
+)

@@ -1,0 +1,46 @@
+"""The paper's own evaluation workloads (Tables VI/VII, Figs. 1 & 14).
+
+Model profiles for the five quantized checkpoints the paper simulates
+end-to-end (Table VI), expressed as ModelConfigs plus the paper's GEMV
+kernel shapes (Table VII).  These drive benchmarks/paper_tables.py and the
+perfmodel analytical simulator.
+"""
+from repro.models.transformer import ModelConfig
+
+# Table VII GEMV workloads: (m, k, n) with INT4/FP4 x BF16 MACs
+GEMV_SHAPES = [(1, 4096, 4096), (1, 4096, 12288)]
+
+# Table VI checkpoints -> (config, quant scheme per component)
+QWEN3_8B = ModelConfig(
+    name="qwen3-8b", family="dense",
+    n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8, d_head=128,
+    d_ff=12_288, vocab=151_936,
+    activation="silu", gated_ffn=True, tie_embeddings=False,
+    scheme_proj="awq_int4", scheme_ffn="awq_int4",
+)
+
+LLAMA31_8B = ModelConfig(
+    name="llama-3.1-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_head=128,
+    d_ff=14_336, vocab=128_256,
+    activation="silu", gated_ffn=True, tie_embeddings=False,
+    scheme_proj="w8a8", scheme_ffn="w8a8",
+)
+
+GPT_OSS_20B = ModelConfig(
+    name="gpt-oss-20b", family="moe",
+    n_layers=24, d_model=2880, n_heads=64, n_kv_heads=8, d_head=64,
+    d_ff=2880, vocab=201_088,
+    n_experts=32, top_k=4, moe_d_ff=2880,
+    activation="silu", gated_ffn=True, tie_embeddings=False,
+    scheme_proj="bf16", scheme_ffn="mxfp4",   # MoE blocks MXFP4, rest BF16
+)
+
+# checkpoint name -> (config, scheme label used in Fig. 1 / Fig. 14)
+PAPER_CHECKPOINTS = {
+    "Qwen-3-8B-AWQ": (QWEN3_8B, "awq_int4"),
+    "Llama-3.1-8B-W8A8": (LLAMA31_8B, "w8a8"),
+    "Qwen-3-8B-FP8": (QWEN3_8B, "fp8"),
+    "Llama-3.1-8B-FP8": (LLAMA31_8B, "fp8"),
+    "GPT-oss-20B": (GPT_OSS_20B, "mxfp4"),
+}

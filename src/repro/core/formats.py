@@ -1,0 +1,315 @@
+"""Datatype registry and bit-level codecs for XtraMAC.
+
+Every format the paper supports (Table II "Ours" row / Fig. 6) is described
+here as either an ``IntFormat`` (two's complement) or a ``FloatFormat``
+(sign / exponent / mantissa with implicit leading one).  The codecs convert
+between raw bit patterns (unsigned integers) and
+
+  * exact float64 values (for oracles — all supported formats are exact in
+    float64), and
+  * the (sign, exponent, mantissa) field decomposition of Eq. (1)/(4) that
+    the XtraMAC datapath consumes.
+
+Numerical conventions follow the paper (Section III-D):
+  * FTZ/DAZ: subnormal inputs decode to zero; subnormal outputs flush to 0.
+  * Formats without an infinity encoding follow OCP conventions:
+    E4M3 reserves only exponent=1111 & mantissa=111 as NaN; E2M1 (FP4) has
+    no NaN/inf at all.
+  * NaNs are canonical quiet NaNs on output.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Union
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class IntFormat:
+    """Two's-complement signed integer format."""
+
+    name: str
+    bits: int
+
+    @property
+    def is_float(self) -> bool:
+        return False
+
+    @property
+    def magnitude_bits(self) -> int:
+        # |min| = 2^(bits-1) needs (bits) bits unsigned (e.g. |-8| = 0b1000).
+        return self.bits
+
+    @property
+    def min_value(self) -> int:
+        return -(1 << (self.bits - 1))
+
+    @property
+    def max_value(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    # -- codecs ------------------------------------------------------------
+    def decode_to_f64(self, bits: np.ndarray) -> np.ndarray:
+        """Bit pattern (uint) -> exact float64 value."""
+        bits = np.asarray(bits, dtype=np.int64) & ((1 << self.bits) - 1)
+        sign_bit = 1 << (self.bits - 1)
+        signed = np.where(bits >= sign_bit, bits - (1 << self.bits), bits)
+        return signed.astype(np.float64)
+
+    def encode_from_int(self, value: np.ndarray) -> np.ndarray:
+        """Saturating encode of an integer value into this format."""
+        v = np.clip(np.asarray(value, dtype=np.int64), self.min_value, self.max_value)
+        return (v & ((1 << self.bits) - 1)).astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """IEEE-style float: 1 sign bit, ``exp_bits``, ``man_bits`` (explicit)."""
+
+    name: str
+    exp_bits: int
+    man_bits: int
+    has_inf: bool = True
+    # E4M3 (OCP): only exp=max & man=all-ones is NaN; other exp=max codes are
+    # normal numbers.  E2M1: no specials at all.
+    special_rule: str = "ieee"  # "ieee" | "e4m3" | "none"
+
+    @property
+    def is_float(self) -> bool:
+        return True
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def exp_max_field(self) -> int:
+        return (1 << self.exp_bits) - 1
+
+    @property
+    def magnitude_bits(self) -> int:
+        # mantissa with implicit leading 1
+        return self.man_bits + 1
+
+    @property
+    def max_unbiased_exp(self) -> int:
+        """Largest unbiased exponent of a finite normal number."""
+        if self.special_rule == "ieee":
+            return self.exp_max_field - 1 - self.bias
+        # e4m3 / none: exponent field all-ones still encodes finite values.
+        return self.exp_max_field - self.bias
+
+    @property
+    def min_unbiased_exp(self) -> int:
+        return 1 - self.bias
+
+    @property
+    def max_finite(self) -> float:
+        if self.special_rule == "e4m3":
+            # exp=max, man=all-ones-but-one is the largest finite (e.g. 448).
+            m = (1 << self.magnitude_bits) - 2  # mantissa just below NaN code
+            return m * 2.0 ** (self.max_unbiased_exp - self.man_bits)
+        m = (1 << self.magnitude_bits) - 1
+        return m * 2.0 ** (self.max_unbiased_exp - self.man_bits)
+
+    # -- field decode (vectorized numpy; mirrored in jnp inside core/mac.py) --
+    def fields(self, bits: np.ndarray):
+        bits = np.asarray(bits, dtype=np.int64) & ((1 << self.bits) - 1)
+        sign = (bits >> (self.exp_bits + self.man_bits)) & 1
+        e_field = (bits >> self.man_bits) & self.exp_max_field
+        m_field = bits & ((1 << self.man_bits) - 1)
+        return sign, e_field, m_field
+
+    def is_nan(self, bits: np.ndarray) -> np.ndarray:
+        sign, e, m = self.fields(bits)
+        if self.special_rule == "ieee":
+            return (e == self.exp_max_field) & (m != 0)
+        if self.special_rule == "e4m3":
+            return (e == self.exp_max_field) & (m == (1 << self.man_bits) - 1)
+        return np.zeros_like(e, dtype=bool)
+
+    def is_inf(self, bits: np.ndarray) -> np.ndarray:
+        sign, e, m = self.fields(bits)
+        if self.special_rule == "ieee" and self.has_inf:
+            return (e == self.exp_max_field) & (m == 0)
+        return np.zeros_like(e, dtype=bool)
+
+    def is_zero_daz(self, bits: np.ndarray) -> np.ndarray:
+        """Zero under DAZ: exponent field == 0 (subnormals -> zero)."""
+        _, e, _ = self.fields(bits)
+        return e == 0
+
+    def decode_to_f64(self, bits: np.ndarray) -> np.ndarray:
+        """Bit pattern -> float64 under DAZ (subnormals read as zero)."""
+        sign, e, m = self.fields(bits)
+        mag = np.where(
+            e == 0,
+            0.0,
+            (m + (1 << self.man_bits)).astype(np.float64)
+            * np.exp2((e - self.bias - self.man_bits).astype(np.float64)),
+        )
+        val = np.where(sign == 1, -mag, mag)
+        val = np.where(self.is_nan(bits), np.nan, val)
+        val = np.where(self.is_inf(bits), np.where(sign == 1, -np.inf, np.inf), val)
+        return val
+
+    # -- canonical special encodings ---------------------------------------
+    @property
+    def qnan_bits(self) -> int:
+        if self.special_rule == "ieee":
+            # quiet NaN: exp all ones, MSB of mantissa set
+            return (self.exp_max_field << self.man_bits) | (1 << (self.man_bits - 1))
+        if self.special_rule == "e4m3":
+            return (self.exp_max_field << self.man_bits) | ((1 << self.man_bits) - 1)
+        raise ValueError(f"{self.name} has no NaN encoding")
+
+    def inf_bits(self, sign: int) -> int:
+        if not (self.special_rule == "ieee" and self.has_inf):
+            raise ValueError(f"{self.name} has no inf encoding")
+        return (sign << (self.exp_bits + self.man_bits)) | (
+            self.exp_max_field << self.man_bits
+        )
+
+    def max_finite_bits(self, sign: int) -> int:
+        if self.special_rule == "e4m3":
+            payload = (self.exp_max_field << self.man_bits) | ((1 << self.man_bits) - 2)
+        elif self.special_rule == "none":
+            payload = (self.exp_max_field << self.man_bits) | ((1 << self.man_bits) - 1)
+        else:
+            payload = ((self.exp_max_field - 1) << self.man_bits) | (
+                (1 << self.man_bits) - 1
+            )
+        return (sign << (self.exp_bits + self.man_bits)) | payload
+
+    def encode(self, sign, e_unbiased, mantissa) -> np.ndarray:
+        """Pack normalized fields. ``mantissa`` includes the implicit bit."""
+        sign = np.asarray(sign, dtype=np.int64)
+        e_field = np.asarray(e_unbiased, dtype=np.int64) + self.bias
+        m_field = np.asarray(mantissa, dtype=np.int64) & ((1 << self.man_bits) - 1)
+        return (
+            (sign << (self.exp_bits + self.man_bits))
+            | (e_field << self.man_bits)
+            | m_field
+        )
+
+
+Format = Union[IntFormat, FloatFormat]
+
+# ---------------------------------------------------------------------------
+# Registry (Table II "Ours": Integer + floating point, all positions A/B/C/P)
+# ---------------------------------------------------------------------------
+INT2 = IntFormat("int2", 2)
+INT3 = IntFormat("int3", 3)
+INT4 = IntFormat("int4", 4)
+INT5 = IntFormat("int5", 5)
+INT6 = IntFormat("int6", 6)
+INT7 = IntFormat("int7", 7)
+INT8 = IntFormat("int8", 8)
+INT16 = IntFormat("int16", 16)
+INT32 = IntFormat("int32", 32)
+
+FP4 = FloatFormat("fp4_e2m1", exp_bits=2, man_bits=1, has_inf=False, special_rule="none")
+FP8_E4M3 = FloatFormat("fp8_e4m3", exp_bits=4, man_bits=3, has_inf=False, special_rule="e4m3")
+FP8_E5M2 = FloatFormat("fp8_e5m2", exp_bits=5, man_bits=2, has_inf=True, special_rule="ieee")
+FP16 = FloatFormat("fp16", exp_bits=5, man_bits=10, has_inf=True, special_rule="ieee")
+BF16 = FloatFormat("bf16", exp_bits=8, man_bits=7, has_inf=True, special_rule="ieee")
+FP32 = FloatFormat("fp32", exp_bits=8, man_bits=23, has_inf=True, special_rule="ieee")
+
+REGISTRY: Dict[str, Format] = {
+    f.name: f
+    for f in [
+        INT2, INT3, INT4, INT5, INT6, INT7, INT8, INT16, INT32,
+        FP4, FP8_E4M3, FP8_E5M2, FP16, BF16, FP32,
+    ]
+}
+# convenience aliases used in configs
+REGISTRY["fp8"] = FP8_E4M3
+REGISTRY["fp4"] = FP4
+
+
+def get_format(name: str) -> Format:
+    try:
+        return REGISTRY[name]
+    except KeyError as exc:
+        raise KeyError(f"unknown XtraMAC format {name!r}; have {sorted(REGISTRY)}") from exc
+
+
+# ---------------------------------------------------------------------------
+# float64 <-> format quantization (RN-even), used by oracles and quant/
+# ---------------------------------------------------------------------------
+def quantize_f64(fmt: Format, value: np.ndarray) -> np.ndarray:
+    """Round float64 values to ``fmt`` bit patterns with RN-even + FTZ.
+
+    Overflow saturates to +/-inf (formats with inf), to NaN (e4m3), or to the
+    max finite value (formats without any special encodings, e.g. FP4) —
+    matching Section III-D's saturating flag-select behaviour.
+    """
+    if isinstance(fmt, IntFormat):
+        v = np.asarray(value, dtype=np.float64)
+        rounded = np.rint(v)  # rint is RN-even
+        return fmt.encode_from_int(rounded.astype(np.int64))
+
+    v = np.asarray(value, dtype=np.float64)
+    out = np.zeros(v.shape, dtype=np.int64)
+    sign = (np.signbit(v)).astype(np.int64)
+
+    nan_mask = np.isnan(v)
+    inf_mask = np.isinf(v)
+    finite = ~(nan_mask | inf_mask)
+
+    mag = np.abs(np.where(finite, v, 0.0))
+    # frexp: mag = frac * 2^e2, frac in [0.5, 1)
+    frac, e2 = np.frexp(mag)
+    e_unbiased = e2 - 1  # value = 1.xxx * 2^(e_unbiased)
+    # integer mantissa with man_bits fractional bits; exact scaling then RN-even
+    scaled = mag * np.exp2(float(fmt.man_bits) - e_unbiased.astype(np.float64))
+    m_int = np.rint(scaled).astype(np.int64)  # RN-even
+    # rounding may carry: mantissa == 2^(man_bits+1)
+    carry = m_int >= (1 << (fmt.man_bits + 1))
+    m_int = np.where(carry, m_int >> 1, m_int)
+    e_unbiased = e_unbiased + carry.astype(np.int64)
+
+    # FTZ: anything below the min normal flushes to zero
+    underflow = (e_unbiased < fmt.min_unbiased_exp) | (mag == 0.0)
+    overflow = e_unbiased > fmt.max_unbiased_exp
+    if fmt.special_rule == "e4m3":
+        # exp=max & man=all-ones collides with NaN -> that code overflows too
+        overflow = overflow | (
+            (e_unbiased == fmt.max_unbiased_exp)
+            & (m_int == (1 << (fmt.man_bits + 1)) - 1)
+        )
+    if fmt.special_rule == "none":
+        overflow = np.zeros_like(overflow)
+        m_clip = np.minimum(m_int, (1 << (fmt.man_bits + 1)) - 1)
+        e_clip = np.minimum(e_unbiased, fmt.max_unbiased_exp)
+        sat = e_unbiased > fmt.max_unbiased_exp
+        m_int = np.where(sat, (1 << (fmt.man_bits + 1)) - 1, m_clip)
+        e_unbiased = np.where(sat, fmt.max_unbiased_exp, e_clip)
+
+    normal = finite & ~underflow & ~overflow
+    out = np.where(normal, fmt.encode(sign, e_unbiased, m_int), out)
+    out = np.where(underflow & finite, sign << (fmt.bits - 1), out)  # +/-0 (FTZ)
+
+    if fmt.special_rule == "ieee" and fmt.has_inf:
+        inf_code = np.where(sign == 1, fmt.inf_bits(1), fmt.inf_bits(0))
+        out = np.where(inf_mask | (finite & overflow), inf_code, out)
+        out = np.where(nan_mask, fmt.qnan_bits, out)
+    elif fmt.special_rule == "e4m3":
+        out = np.where(inf_mask | (finite & overflow) | nan_mask, fmt.qnan_bits, out)
+    else:  # no specials: saturate everything to max finite
+        maxf = np.where(sign == 1, fmt.max_finite_bits(1), fmt.max_finite_bits(0))
+        out = np.where(inf_mask, maxf, out)
+        out = np.where(nan_mask, 0, out)  # no NaN encoding: canonical 0
+    return out.astype(np.int64)
+
+
+def all_bit_patterns(fmt: Format) -> np.ndarray:
+    """Every bit pattern of a (small) format — for exhaustive tests."""
+    if fmt.bits > 16:
+        raise ValueError("exhaustive enumeration only for <=16-bit formats")
+    return np.arange(1 << fmt.bits, dtype=np.int64)

@@ -1,0 +1,283 @@
+"""Vectorized XtraMAC datapath — the paper's four-stage pipeline as array ops.
+
+This mirrors the microarchitecture of Fig. 5 stage by stage:
+
+  Stage 1  ``map_operand``       operand interpretation -> (s, m, e) + flags
+  Stage 2  ``multiply``          datatype-invariant integer mantissa product
+                                  (the virtual DSP), sign XOR, exponent add
+  Stage 3  ``accumulate_float`` / ``accumulate_int``
+                                  decoupled FP / INT accumulation paths
+  Stage 4  ``select_output``     flag-based combinational output selection
+
+All arithmetic is exact int64 (mantissa products are <= 24 bits; the FP
+adder aligns into a 50-bit window, so guard/round/sticky analysis below
+guarantees correct RN-even).  Bit-exactness against the unbounded-integer
+oracle in ``ref_mac.py`` is asserted by tests/test_mac_bitexact.py.
+
+Why numpy and not jnp: this module is the *bit-exact emulation* of the
+hardware (a validation artifact + the numerics spec for quant/).  The hot
+TPU path lives in kernels/ (packed GEMV / packed matmul), which use the
+scaled-integer dequant formulation of the same arithmetic; their oracles
+trace back to this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+
+from .formats import Format, FloatFormat, IntFormat, get_format
+
+_ALIGN_BITS = 50  # FP adder alignment window (int64-safe; >=25 guard bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class MacConfig:
+    """One supported datatype combination ``A x B + C -> P`` (a Fig. 6 row)."""
+
+    fmt_a: Format
+    fmt_b: Format
+    fmt_c: Format
+    fmt_p: Format
+
+    @staticmethod
+    def make(a: str, b: str, c: str, p: str) -> "MacConfig":
+        return MacConfig(get_format(a), get_format(b), get_format(c), get_format(p))
+
+    @property
+    def name(self) -> str:
+        return f"{self.fmt_a.name}x{self.fmt_b.name}+{self.fmt_c.name}->{self.fmt_p.name}"
+
+    @property
+    def is_int_accumulate(self) -> bool:
+        return isinstance(self.fmt_p, IntFormat)
+
+
+class Decoded(NamedTuple):
+    """Stage-1 output: sign/magnitude/exponent + special-value flags.
+
+    value = (-1)^sign * mag * 2^exp   (mag==0 encodes zero; DAZ applied)
+    """
+
+    sign: np.ndarray
+    mag: np.ndarray
+    exp: np.ndarray
+    nan: np.ndarray
+    inf: np.ndarray
+
+
+def _bitlen(x: np.ndarray) -> np.ndarray:
+    """Bit length of non-negative int64 values (exact for x < 2^52)."""
+    _, e = np.frexp(x.astype(np.float64))
+    return e.astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: operand interpretation & bit-mapping
+# ---------------------------------------------------------------------------
+def map_operand(fmt: Format, bits: np.ndarray) -> Decoded:
+    bits = np.asarray(bits, dtype=np.int64) & ((1 << fmt.bits) - 1)
+    if isinstance(fmt, IntFormat):
+        sign_bit = np.int64(1) << (fmt.bits - 1)
+        signed = np.where(bits >= sign_bit, bits - (np.int64(1) << fmt.bits), bits)
+        sign = (signed < 0).astype(np.int64)
+        mag = np.abs(signed)
+        z = np.zeros_like(bits, dtype=bool)
+        return Decoded(sign, mag, np.zeros_like(bits), z, z)
+
+    assert isinstance(fmt, FloatFormat)
+    sign = (bits >> (fmt.exp_bits + fmt.man_bits)) & 1
+    e_field = (bits >> fmt.man_bits) & fmt.exp_max_field
+    m_field = bits & ((1 << fmt.man_bits) - 1)
+    if fmt.special_rule == "ieee":
+        nan = (e_field == fmt.exp_max_field) & (m_field != 0)
+        inf = (e_field == fmt.exp_max_field) & (m_field == 0)
+    elif fmt.special_rule == "e4m3":
+        nan = (e_field == fmt.exp_max_field) & (m_field == (1 << fmt.man_bits) - 1)
+        inf = np.zeros_like(nan)
+    else:
+        nan = np.zeros(bits.shape, dtype=bool)
+        inf = np.zeros_like(nan)
+    zero = e_field == 0  # DAZ
+    mag = np.where(zero | nan | inf, 0, m_field | (np.int64(1) << fmt.man_bits))
+    exp = np.where(zero | nan | inf, 0, e_field - fmt.bias - fmt.man_bits)
+    return Decoded(sign.astype(np.int64), mag, exp, nan, inf)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: datatype-invariant multiply (integer mantissa product) + metadata
+# ---------------------------------------------------------------------------
+class Product(NamedTuple):
+    sign: np.ndarray
+    mag: np.ndarray   # exact integer mantissa product
+    exp: np.ndarray
+    nan: np.ndarray   # NaN in, or inf * 0
+    inf: np.ndarray
+
+
+def multiply(da: Decoded, db: Decoded) -> Product:
+    sign = da.sign ^ db.sign
+    mag = da.mag * db.mag                     # <- the shared DSP multiply
+    exp = da.exp + db.exp
+    nan = da.nan | db.nan
+    inf_times_zero = (da.inf & (db.mag == 0) & ~db.inf & ~db.nan) | (
+        db.inf & (da.mag == 0) & ~da.inf & ~da.nan
+    )
+    nan = nan | inf_times_zero
+    inf = (da.inf | db.inf) & ~nan
+    return Product(sign, mag, exp, nan, inf)
+
+
+# ---------------------------------------------------------------------------
+# Stage 3a: floating-point accumulation (alignment + add + LZC normalize)
+# ---------------------------------------------------------------------------
+def _align(mag: np.ndarray, exp: np.ndarray, e_target: np.ndarray) -> np.ndarray:
+    """Shift (mag, exp) to exponent ``e_target``; sticky folds into the LSB.
+
+    Left shifts are exact by construction (result < 2^ALIGN_BITS).  Lossy
+    right shifts only happen when the operand is >2^(ALIGN_BITS-24) below
+    the top — cancellation is then impossible, so LSB-sticky + >=25 guard
+    bits make RN-even exact (validated exhaustively in tests).
+    """
+    sh = exp - e_target
+    shl = np.clip(sh, 0, 63)
+    shr = np.clip(-sh, 0, 63)
+    left = mag << shl
+    kept = mag >> shr
+    sticky = (kept << shr) != mag
+    right = kept | sticky.astype(np.int64)
+    return np.where(sh >= 0, left, right)
+
+
+class FpResult(NamedTuple):
+    sign: np.ndarray
+    mag: np.ndarray
+    exp: np.ndarray
+
+
+def fp_add(s1, m1, e1, s2, m2, e2) -> FpResult:
+    """Exact-enough FP add of two (sign, mag, exp) values (magnitudes > 0 ok)."""
+    neg_inf = np.int64(-(10**9))
+    top1 = np.where(m1 > 0, e1 + _bitlen(m1), neg_inf)
+    top2 = np.where(m2 > 0, e2 + _bitlen(m2), neg_inf)
+    e_t = np.maximum(top1, top2) - _ALIGN_BITS
+    a = _align(m1, e1, e_t)
+    b = _align(m2, e2, e_t)
+    v = np.where(s1 == 1, -a, a) + np.where(s2 == 1, -b, b)
+    sign = (v < 0).astype(np.int64)
+    return FpResult(sign, np.abs(v), e_t)
+
+
+def _round_encode_float(fmt: FloatFormat, sign, mag, exp):
+    """RN-even round of value=(-1)^s*mag*2^exp into fmt; FTZ + saturation.
+
+    Returns (bits, overflow_mask) — overflow resolved by stage 4.
+    """
+    n = _bitlen(mag)
+    man1 = fmt.man_bits + 1
+    shift = n - man1
+    shr = np.clip(shift, 0, 63)
+    shl = np.clip(-shift, 0, 63)
+    kept = np.where(shift > 0, mag >> shr, mag << shl)
+    mask = (np.int64(1) << shr) - 1
+    rem = np.where(shift > 0, mag & mask, 0)
+    half = np.where(shift > 0, np.int64(1) << np.maximum(shr - 1, 0), np.int64(1))
+    up = (rem > half) | ((rem == half) & (rem > 0) & ((kept & 1) == 1))
+    kept = kept + up.astype(np.int64)
+    carry = kept == (np.int64(1) << man1)
+    kept = np.where(carry, kept >> 1, kept)
+    e_val = exp + n - 1 + carry.astype(np.int64)
+
+    zero = mag == 0
+    underflow = (e_val < fmt.min_unbiased_exp) & ~zero
+    overflow = (e_val > fmt.max_unbiased_exp) & ~zero
+    if fmt.special_rule == "e4m3":
+        overflow = overflow | (
+            (e_val == fmt.max_unbiased_exp) & (kept == (1 << man1) - 1)
+        )
+
+    e_enc = np.clip(e_val, fmt.min_unbiased_exp, fmt.max_unbiased_exp)
+    bits = fmt.encode(sign, e_enc, kept)
+    # +0 for exact-zero results; signed zero kept only via FTZ underflow
+    bits = np.where(zero, 0, bits)
+    bits = np.where(underflow, sign << (fmt.bits - 1), bits)
+    return bits, overflow
+
+
+# ---------------------------------------------------------------------------
+# Stage 3b: integer accumulation (carry-chain path; saturating)
+# ---------------------------------------------------------------------------
+def accumulate_int(fmt_p: IntFormat, prod: Product, dc: Decoded) -> np.ndarray:
+    sp = np.where(prod.sign == 1, -prod.mag, prod.mag)
+    sc = np.where(dc.sign == 1, -dc.mag, dc.mag)
+    acc = sp + sc  # exact in int64 for all supported widths
+    acc = np.clip(acc, fmt_p.min_value, fmt_p.max_value)
+    return acc & ((np.int64(1) << fmt_p.bits) - 1)
+
+
+# ---------------------------------------------------------------------------
+# Stage 4: flag-driven output selection (purely combinational in hardware)
+# ---------------------------------------------------------------------------
+def select_output(fmt_p: FloatFormat, bits, overflow, nan, inf, inf_sign):
+    if fmt_p.special_rule == "ieee" and fmt_p.has_inf:
+        pos_inf, neg_inf_b = fmt_p.inf_bits(0), fmt_p.inf_bits(1)
+        bits = np.where(overflow | inf, np.where(inf_sign == 1, neg_inf_b, pos_inf), bits)
+        # `overflow` uses the result sign, folded into inf_sign by the caller
+        bits = np.where(nan, fmt_p.qnan_bits, bits)
+    elif fmt_p.special_rule == "e4m3":
+        bits = np.where(overflow | inf | nan, fmt_p.qnan_bits, bits)
+    else:
+        maxf = np.where(inf_sign == 1, fmt_p.max_finite_bits(1), fmt_p.max_finite_bits(0))
+        bits = np.where(overflow | inf, maxf, bits)
+        bits = np.where(nan, 0, bits)
+    return bits
+
+
+# ---------------------------------------------------------------------------
+# Full MAC: P = A*B + C
+# ---------------------------------------------------------------------------
+def xtramac(cfg: MacConfig, a_bits, b_bits, c_bits) -> np.ndarray:
+    """Vectorized XtraMAC MAC over arrays of raw bit patterns."""
+    a_bits, b_bits, c_bits = np.broadcast_arrays(
+        np.asarray(a_bits, np.int64), np.asarray(b_bits, np.int64), np.asarray(c_bits, np.int64)
+    )
+    da = map_operand(cfg.fmt_a, a_bits)           # Stage 1
+    db = map_operand(cfg.fmt_b, b_bits)
+    dc = map_operand(cfg.fmt_c, c_bits)
+    prod = multiply(da, db)                        # Stage 2
+
+    if cfg.is_int_accumulate:
+        return accumulate_int(cfg.fmt_p, prod, dc)  # Stage 3b (+4 trivial)
+
+    fmt_p = cfg.fmt_p
+    assert isinstance(fmt_p, FloatFormat)
+    res = fp_add(prod.sign, prod.mag, prod.exp, dc.sign, dc.mag, dc.exp)  # Stage 3a
+    bits, overflow = _round_encode_float(fmt_p, res.sign, res.mag, res.exp)
+
+    # special-value resolution (Stage 4)
+    nan = prod.nan | dc.nan | (prod.inf & dc.inf & (prod.sign != dc.sign))
+    inf = (prod.inf | dc.inf) & ~nan
+    inf_sign = np.where(prod.inf, prod.sign, dc.sign)
+    # saturation keeps the sign of the (finite) overflowed result
+    inf_sign = np.where(inf, inf_sign, res.sign)
+    return select_output(fmt_p, bits, overflow, nan, inf, inf_sign)
+
+
+# ---------------------------------------------------------------------------
+# Runtime datatype switching: N static submodules + per-element mux (Fig. 5)
+# ---------------------------------------------------------------------------
+def xtramac_switching(configs, dtype_sel, a_bits, b_bits, c_bits) -> np.ndarray:
+    """All N mapping/datapath variants evaluated, output muxed by dtype_sel.
+
+    This is exactly the paper's switching mechanism: every datatype submodule
+    is instantiated statically; ``dtype_sel`` picks one per element/cycle.
+    Output formats may differ per config; results are returned as raw bit
+    patterns (int64) of each selected config's fmt_p.
+    """
+    dtype_sel = np.asarray(dtype_sel)
+    outs = [xtramac(cfg, a_bits, b_bits, c_bits) for cfg in configs]
+    out = outs[0]
+    for i in range(1, len(configs)):
+        out = np.where(dtype_sel == i, outs[i], out)
+    return out

@@ -1,0 +1,59 @@
+"""Public jit'd entry points for the XtraMAC kernels.
+
+``quantized_matmul`` is the single dispatch the model layer calls: it picks
+the kernel (or the pure-jnp reference path) from the layer's quantization
+scheme.  ``use_kernel=False`` (default on CPU / under pjit partitioning)
+runs the mathematically-identical jnp path — packed weights either way, so
+HBM traffic (the roofline memory term) is the same; the Pallas path is the
+TPU-target fast path validated under interpret=True.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.quant.schemes import (
+    QuantizedLinearWeights, quantize_activations_int8,
+)
+from . import ref
+from .packed_matmul import packed_gemv, packed_matmul, w8a8_matmul
+from .xtramac_mac import virtual_dsp_multiply  # noqa: F401  (re-export)
+
+
+def quantized_matmul(x, qw: QuantizedLinearWeights, *, use_kernel: bool = False,
+                     interpret: bool = True, out_dtype=jnp.bfloat16):
+    """x [..., K] @ quantized W [K, N] -> [..., N] in ``out_dtype``.
+
+    Scheme dispatch (paper Table I):
+      awq_int4 / mxfp4 : INTx/FP4 x BF16 -> packed sub-byte kernel
+      fp8              : FP8 weights (per-channel scale) -> packed kernel
+      w8a8             : INT8 x INT8 -> INT32 (activations quantized here)
+      bf16             : dense bf16 matmul (attention-path MACs)
+    """
+    scheme = qw.scheme
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+
+    if scheme.name == "bf16":
+        out = jnp.dot(x2.astype(jnp.bfloat16), qw.packed)
+    elif scheme.name == "w8a8":
+        x_codes, x_scale = quantize_activations_int8(x2)
+        if use_kernel:
+            out = w8a8_matmul(x_codes, x_scale, qw.packed, qw.scales,
+                              interpret=interpret)
+        else:
+            out = ref.w8a8_matmul_ref(x_codes, x_scale, qw.packed, qw.scales)
+    elif scheme.packed:  # awq_int4 / mxfp4 / fp8 — sub-byte/byte packed words
+        if use_kernel:
+            fn = packed_gemv if x2.shape[0] <= 8 else packed_matmul
+            out = fn(x2, qw, interpret=interpret)
+        else:
+            # jnp fallback: dequantize INTO bf16 — exactly the paper's
+            # Stage-1 mapping (the INTxFP product's FP side is BF16); the
+            # Pallas kernel keeps the fused f32-accumulate version
+            from repro.quant.schemes import dequantize
+            w = dequantize(qw, dtype=jnp.bfloat16)
+            out = jnp.dot(x2.astype(jnp.bfloat16), w)
+    else:
+        raise ValueError(scheme.name)
+    return out.reshape(*lead, -1).astype(out_dtype)

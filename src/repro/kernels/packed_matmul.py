@@ -1,0 +1,211 @@
+"""Pallas TPU kernels: mixed-precision matmul/GEMV over packed weights.
+
+This is the TPU realization of the paper's Section VI GEMV engine: weights
+live in HBM as packed sub-byte codes (8x INT4/FP4 or 4x INT8/FP8 per int32
+word — the analogue of the 512-bit HBM channel words feeding XtraMAC
+chains), are streamed block-by-block into VMEM, unpacked + decoded with
+XtraMAC Stage-1 semantics (DAZ, implicit-one restore), scaled, and fed to
+the MXU.  Accumulation is f32 (the BF16-accumulate spec lives in core.mac;
+tensor-core-style f32 accumulation is strictly more accurate and is what
+the MXU provides natively — noted in DESIGN.md).
+
+Kernels:
+  * ``packed_matmul``  A[M,K] bf16 x packed W[K,N] -> f32 [M,N]
+                       grid (M/bm, N/bn, K/bk), revisiting-accumulate on k
+  * ``w8a8_matmul``    int8 x int8 -> int32 MXU accumulate -> scale epilogue
+
+Block shapes are MXU/VMEM aligned by default (bn multiple of 128, bk
+multiple of the packing group) and validated under interpret=True on CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.quant.schemes import QuantScheme, QuantizedLinearWeights
+
+
+# ---------------------------------------------------------------------------
+# In-kernel arithmetic decode (no gathers — TPU-friendly), DAZ semantics
+# ---------------------------------------------------------------------------
+def _decode_int(codes, bits: int):
+    half = 1 << (bits - 1)
+    return jnp.where(codes >= half, codes - (1 << bits), codes).astype(jnp.float32)
+
+
+def _decode_fp4_e2m1(codes):
+    s = (codes >> 3) & 1
+    e = (codes >> 1) & 3
+    m = codes & 1
+    mag = jnp.where(e == 0, 0.0,
+                    (2 + m).astype(jnp.float32) * jnp.exp2((e - 2).astype(jnp.float32)))
+    return jnp.where(s == 1, -mag, mag)
+
+
+def _decode_fp8_e4m3(codes):
+    s = (codes >> 7) & 1
+    e = (codes >> 3) & 0xF
+    m = codes & 7
+    nan = (e == 0xF) & (m == 7)
+    mag = jnp.where(e == 0, 0.0,
+                    (8 + m).astype(jnp.float32) * jnp.exp2((e - 10).astype(jnp.float32)))
+    mag = jnp.where(nan, 0.0, mag)  # weights never encode NaN; decode as 0
+    return jnp.where(s == 1, -mag, mag)
+
+
+def decode_codes_arith(scheme: QuantScheme, codes):
+    if scheme.weight_format.startswith("int"):
+        return _decode_int(codes, scheme.weight_bits)
+    if scheme.weight_format == "fp4_e2m1":
+        return _decode_fp4_e2m1(codes)
+    if scheme.weight_format == "fp8_e4m3":
+        return _decode_fp8_e4m3(codes)
+    raise ValueError(scheme.weight_format)
+
+
+def _unpack_block(words, bits: int):
+    """int32 [bkw, bn] -> codes [bkw*per, bn] (little-endian along K)."""
+    per = 32 // bits
+    mask = (1 << bits) - 1
+    parts = [(words >> (i * bits)) & mask for i in range(per)]
+    stacked = jnp.stack(parts, axis=1)                 # [bkw, per, bn]
+    return stacked.reshape(words.shape[0] * per, words.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# packed matmul kernel
+# ---------------------------------------------------------------------------
+def _packed_matmul_kernel(x_ref, w_ref, s_ref, o_ref, *, scheme: QuantScheme,
+                          bk: int, group: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = _unpack_block(w_ref[...], scheme.weight_bits)       # [bk, bn]
+    vals = decode_codes_arith(scheme, codes)                    # f32
+    ng = bk // group
+    scales = s_ref[...]                                         # [ng, bn]
+    vals = (vals.reshape(ng, group, vals.shape[-1]) * scales[:, None, :]) \
+        .reshape(bk, vals.shape[-1])
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, vals, preferred_element_type=jnp.float32)
+
+
+def _pick(block: int, dim: int) -> int:
+    return min(block, dim)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scheme_name", "k", "n", "bm", "bn", "bk", "interpret"),
+)
+def _packed_matmul_impl(x, packed, scales, *, scheme_name: str, k: int, n: int,
+                        bm: int, bn: int, bk: int, interpret: bool):
+    from repro.quant.schemes import get_scheme
+    scheme = get_scheme(scheme_name)
+    m = x.shape[0]
+    per = 32 // scheme.weight_bits
+    group = k if scheme.group_size == -1 else scheme.group_size
+    grid = (m // bm, n // bn, k // bk)
+    ng = bk // group if group <= bk else 1
+    if group > bk:  # per-channel (group == k): one scale row for all k-blocks
+        scale_spec = pl.BlockSpec((1, bn), lambda i, j, l: (0, j))
+    else:
+        scale_spec = pl.BlockSpec((ng, bn), lambda i, j, l: (l, j))
+    kernel = functools.partial(
+        _packed_matmul_kernel, scheme=scheme, bk=bk, group=min(group, bk)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk // per, bn), lambda i, j, l: (l, j)),
+            scale_spec,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, packed, scales)
+
+
+def packed_matmul(x, qw: QuantizedLinearWeights, *, bm: int = 128, bn: int = 128,
+                  bk: int = 512, interpret: bool = False):
+    """x [M, K] (bf16) @ packed W [K, N] -> f32 [M, N]."""
+    k, n = qw.shape
+    m = x.shape[0]
+    scheme = qw.scheme
+    assert scheme.packed, "packed_matmul requires a sub-byte scheme"
+    group = k if scheme.group_size == -1 else scheme.group_size
+    bm, bn = _pick(bm, m), _pick(bn, n)
+    bk = _pick(bk, k)
+    if group <= bk:
+        bk = (bk // group) * group
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    return _packed_matmul_impl(
+        x, qw.packed, qw.scales, scheme_name=scheme.name, k=k, n=n,
+        bm=bm, bn=bn, bk=bk, interpret=interpret,
+    )
+
+
+def packed_gemv(x, qw: QuantizedLinearWeights, *, bn: int = 256, bk: int = 1024,
+                interpret: bool = False):
+    """Decode-shape GEMV: x [B, K] with small B (the paper's Section VI-C)."""
+    return packed_matmul(x, qw, bm=x.shape[0], bn=bn, bk=bk, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# W8A8: INT8 x INT8 -> INT32 (the paper's integer accumulate path)
+# ---------------------------------------------------------------------------
+def _w8a8_kernel(x_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # exact INT8 x INT8 -> INT32 accumulation (the paper's integer adder path)
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.int32), w_ref[...].astype(jnp.int32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _w8a8_impl(x_codes, w_codes, *, bm, bn, bk, interpret):
+    m, k = x_codes.shape
+    n = w_codes.shape[1]
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _w8a8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x_codes, w_codes)
+
+
+def w8a8_matmul(x_codes, x_scale, w_codes, w_scales, *, bm: int = 128,
+                bn: int = 128, bk: int = 512, interpret: bool = False):
+    """INT8 codes x INT8 codes -> exact INT32 accumulate -> f32 descale.
+
+    x_codes [M, K] int8 (per-tensor scale x_scale), w_codes [K, N] int8
+    (per-channel scales [1, N]).  Output f32 [M, N] already descaled.
+    """
+    m, k = x_codes.shape
+    n = w_codes.shape[1]
+    bm, bn, bk = _pick(bm, m), _pick(bn, n), _pick(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    acc = _w8a8_impl(x_codes, w_codes, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return acc.astype(jnp.float32) * (w_scales * x_scale)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function computes the same mathematical result as its kernel twin via
+plain jnp (dequantize -> dense matmul), with f32 accumulation.  The
+bit-level packing oracle delegates to core.packing (numpy int64 — exact).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packing import LanePlan, packed_multiply
+from repro.quant.schemes import QuantizedLinearWeights, dequantize
+
+
+def packed_matmul_ref(x, qw: QuantizedLinearWeights):
+    """x [M, K] bf16 @ packed W [K, N] -> f32 [M, N] (dequant-then-matmul).
+
+    Dequantizes in f32 (fused-kernel semantics: decoded values are never
+    rounded to bf16 before the MXU)."""
+    w = dequantize(qw, dtype=jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+
+
+def packed_gemv_ref(x, qw: QuantizedLinearWeights):
+    """GEMV special case (decode shapes): x [B, K], B small."""
+    return packed_matmul_ref(x, qw)
+
+
+def w8a8_matmul_ref(x_codes, x_scale, w_codes, w_scales):
+    """INT8 x INT8 -> INT32 accumulate -> scale epilogue (SmoothQuant MAC).
+
+    x_codes [M, K] int8; w_codes [K, N] int8; w_scales [1, N] f32.
+    INT32 accumulation is exact, matching the paper's integer adder path.
+    """
+    acc = jnp.dot(
+        x_codes.astype(jnp.int32), w_codes.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    # same association as the kernel epilogue (floats are non-associative)
+    return acc.astype(jnp.float32) * (w_scales * x_scale)
+
+
+def virtual_dsp_ref(plan: LanePlan, a_mags: np.ndarray, b_mags: np.ndarray):
+    """Lane products via the exact int64 virtual-DSP packing (Eqs. 9-11)."""
+    return packed_multiply(plan, np.asarray(a_mags), np.asarray(b_mags))

@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh).
+
+The two lines above MUST run before any jax import — jax locks the device
+count at first init.  512 host-platform placeholder devices let
+``jax.make_mesh`` build the production meshes:
+
+  pod1: (data=16, model=16)          — 256 chips; roofline source
+  pod2: (pod=2, data=16, model=16)   — 512 chips; proves the 'pod' axis
+
+Per cell this script records ``compiled.memory_analysis()`` (proves it
+fits), ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline) and the
+collective-op byte census parsed from the compiled HLO, into
+``results/dryrun/<arch>.<shape>.<mesh>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k --mesh pod1
+  python -m repro.launch.dryrun --all [--skip-existing]   # subprocess/cell
+"""
+import argparse
+import json
+import pathlib
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,512]' -> bytes; tuples handled by the caller via findall."""
+    m = re.match(r"(\w+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def collective_census(hlo_text: str):
+    """Sum result-shape bytes of every collective op in the compiled HLO.
+
+    Result bytes ≈ wire bytes per device for all-reduce (ring: 2(n-1)/n x)
+    and all-gather ((n-1)/n x); reduce-scatter counted at operand size
+    (result x shards) when replica_groups are parseable.
+    """
+    census = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    # lines like:  %x = (bf16[..], bf16[..]) all-gather(...), replica_groups=
+    op_re = re.compile(
+        r"=\s*(\([^)]*\)|\S+\[[\d,]*\]\S*)\s+(" + "|".join(_COLLECTIVES)
+        + r")\b(.*)$")
+    for line in hlo_text.splitlines():
+        m = op_re.search(line)
+        if not m:
+            continue
+        shapes, op, rest = m.groups()
+        nbytes = sum(_shape_bytes(s) for s in
+                     re.findall(r"\w+\[[\d,]*\]", shapes))
+        if op == "reduce-scatter":
+            g = re.search(r"replica_groups=\{\{([\d,]+)\}", rest)
+            if g:
+                nbytes *= len(g.group(1).split(","))
+        census[op]["count"] += 1
+        census[op]["bytes"] += nbytes
+    census["total_bytes"] = sum(v["bytes"] for k, v in census.items()
+                                if isinstance(v, dict))
+    return census
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str) -> dict:
+    import jax
+    from repro.configs import SHAPES, get_config, shape_applicable
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = shape_applicable(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": skip}
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    n_dev = mesh.size
+    fn, args, in_sh, out_sh, donate = build_cell(cfg, shape, mesh)
+
+    t0 = time.time()
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=donate)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    from repro.launch.hlo_analysis import analyze
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    hlo = analyze(hlo_text)             # trip-count-aware (scan bodies x L)
+    # cache the compiled HLO so the analyzer can be re-run offline
+    import gzip
+    hdir = RESULTS / "hlo"
+    hdir.mkdir(parents=True, exist_ok=True)
+    with gzip.open(hdir / f"{arch}.{shape_name}.{mesh_name}.hlo.gz", "wt") as f:
+        f.write(hlo_text)
+
+    out = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "peak_bytes_estimate": (
+                (getattr(mem, "argument_size_in_bytes", 0) or 0)
+                + (getattr(mem, "output_size_in_bytes", 0) or 0)
+                + (getattr(mem, "temp_size_in_bytes", 0) or 0)
+                - (getattr(mem, "alias_size_in_bytes", 0) or 0)),
+        },
+        # raw XLA numbers (loop bodies counted once — kept for reference)
+        "cost_raw": {"flops": cost.get("flops"),
+                     "bytes_accessed": cost.get("bytes accessed"),
+                     "transcendentals": cost.get("transcendentals")},
+        # trip-count-aware per-device analysis (the roofline source)
+        "hlo": hlo.to_json(),
+        "collectives": hlo.coll,
+    }
+    return out
+
+
+def cell_path(arch, shape, mesh) -> pathlib.Path:
+    return RESULTS / f"{arch}.{shape}.{mesh}.json"
+
+
+def reanalyze_all():
+    """Re-run the HLO analyzer over cached compiled HLO (no recompile)."""
+    import gzip
+    from repro.launch.hlo_analysis import analyze
+    n = 0
+    for path in sorted(RESULTS.glob("*.json")):
+        d = json.loads(path.read_text())
+        if d.get("status") != "ok":
+            continue
+        hpath = RESULTS / "hlo" / (path.stem + ".hlo.gz")
+        if not hpath.exists():
+            continue
+        with gzip.open(hpath, "rt") as f:
+            hlo = analyze(f.read())
+        d["hlo"] = hlo.to_json()
+        d["collectives"] = hlo.coll
+        path.write_text(json.dumps(d, indent=1))
+        n += 1
+        print(f"reanalyzed {path.stem}: hbm {hlo.hbm_bytes:.3e} B, "
+              f"flops {hlo.flops:.3e}", flush=True)
+    print(f"{n} cells reanalyzed")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["pod1", "pod2"], default="pod1")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true")
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    if args.reanalyze:
+        reanalyze_all()
+        return
+
+    if not args.all:
+        res = run_cell(args.arch, args.shape, args.mesh)
+        path = cell_path(args.arch, args.shape, args.mesh)
+        path.write_text(json.dumps(res, indent=1))
+        print(json.dumps({k: res[k] for k in ("arch", "shape", "mesh", "status")}))
+        if res["status"] == "ok":
+            print(f"  peak bytes/device ~ {res['memory']['peak_bytes_estimate']/2**30:.2f} GiB, "
+                  f"flops/dev {res['hlo']['flops']:.3e}, "
+                  f"hbm/dev {res['hlo']['hbm_bytes']:.3e} B, "
+                  f"coll/dev {res['hlo']['collective_bytes']/2**20:.1f} MiB")
+        return
+
+    # --all: one subprocess per cell (isolates compiles; resumable)
+    from repro.configs import ARCH_IDS, SHAPES   # light import (no jax use)
+    failures = []
+    for mesh_name in ("pod1", "pod2"):
+        for arch in ARCH_IDS:
+            for shape_name in SHAPES:
+                path = cell_path(arch, shape_name, mesh_name)
+                if args.skip_existing and path.exists():
+                    st = json.loads(path.read_text()).get("status")
+                    if st in ("ok", "skipped"):
+                        continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape_name,
+                       "--mesh", mesh_name]
+                print(f"=== {arch} x {shape_name} x {mesh_name}", flush=True)
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   timeout=7200)
+                print(r.stdout, flush=True)
+                if r.returncode != 0:
+                    failures.append((arch, shape_name, mesh_name))
+                    path.write_text(json.dumps({
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "status": "error", "stderr": r.stderr[-4000:]}, indent=1))
+                    print(r.stderr[-2000:], flush=True)
+    print(f"done; {len(failures)} failures: {failures}")
+
+
+if __name__ == "__main__":
+    try:
+        main()
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)

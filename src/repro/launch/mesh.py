@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, and everything else sees the real (single-CPU) device.
+
+Mesh layout (TPU v5e pods of 256 chips):
+  single-pod : (data=16, model=16)               = 256 chips
+  multi-pod  : (pod=2, data=16, model=16)        = 512 chips
+The 'model' axis is the innermost (fastest ICI ring) — TP/EP collectives
+stay on-pod; only the DP gradient all-reduce crosses the 'pod' axis.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(n_devices=None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = n_devices or len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

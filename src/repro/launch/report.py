@@ -1,0 +1,38 @@
+"""Render the §Roofline markdown table from results/roofline.json.
+
+  PYTHONPATH=src python -m repro.launch.roofline --json results/roofline.json
+  PYTHONPATH=src python -m repro.launch.report
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results"
+
+
+def markdown_table(rows) -> str:
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| M/H | peak GiB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            continue
+        t = r["terms_s"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute']:.4g} | "
+            f"{t['memory']:.4g} | {t['collective']:.4g} | {r['dominant']} | "
+            f"{r['model_over_hlo']:.2f} | {r['peak_gib']:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = json.loads((RESULTS / "roofline.json").read_text())
+    print(markdown_table(rows))
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    print(f"\n{len(ok)} cells analyzed, {len(skipped)} skipped")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline of EXPERIMENTS).
+
+Per (arch x shape) cell on the single-pod mesh:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory term     = HLO_bytes_per_device / HBM_bw_per_chip
+  collective term = collective_bytes_per_device / ICI_link_bw
+
+(The dry-run HLO is the per-device SPMD program, so per-device numbers
+over per-chip rates equal the global-over-cluster formulation.)
+
+Also reports MODEL_FLOPS = 6·N·D (train) / 2·N_active·tokens (decode) and
+the MODEL/HLO ratio — remat & redundancy show up as ratio < 1 for train
+(recompute is counted in HLO) and sharding waste as ratio << 1.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Usage:  python -m repro.launch.roofline [--mesh pod1] [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link (one-link conservative model)
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results"
+
+
+def model_params(cfg) -> Dict[str, float]:
+    """Total and active parameter counts from the abstract param tree."""
+    import jax
+    import numpy as np
+    from repro.launch.steps import abstract_params
+    tree = abstract_params(cfg, quantize=False)
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = "/".join(str(getattr(p, "key", getattr(p, "name", p)))
+                        for p in path)
+        if "moe" in keys and ("w_gate" in keys or "w_up" in keys
+                              or "w_down" in keys):
+            expert += n
+    active = total
+    if cfg.n_experts and cfg.top_k:
+        active = total - expert * (1 - cfg.top_k / cfg.n_experts)
+    return {"total": float(total), "active": float(active)}
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for the cell (no attention/remat terms)."""
+    p = model_params(cfg)
+    n_active = p["active"]
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens
+
+
+def analyze_cell(arch: str, shape_name: str, mesh: str = "pod1"
+                 ) -> Optional[Dict]:
+    from repro.configs import SHAPES, get_config
+    path = RESULTS / "dryrun" / f"{arch}.{shape_name}.{mesh}.json"
+    if not path.exists():
+        return None
+    d = json.loads(path.read_text())
+    if d.get("status") != "ok":
+        return {"arch": arch, "shape": shape_name, "mesh": mesh,
+                "status": d.get("status"), "reason": d.get("reason")}
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    hlo = d["hlo"]
+    t_compute = hlo["flops"] / PEAK_FLOPS
+    t_memory = hlo["hbm_bytes"] / HBM_BW
+    t_coll = hlo["collective_bytes"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_flops_global = hlo["flops"] * d["devices"]
+    coll = hlo["collectives"]
+    top_coll = max(coll, key=lambda k: coll[k]["bytes"]) if any(
+        v["bytes"] for v in coll.values()) else "none"
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh, "status": "ok",
+        "terms_s": {k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant,
+        "bound_time_s": max(terms.values()),
+        "roofline_fraction": max(terms.values()) / sum(terms.values())
+        if sum(terms.values()) else 0.0,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_flops_global,
+        "model_over_hlo": mf / hlo_flops_global if hlo_flops_global else 0.0,
+        "top_collective": top_coll,
+        "peak_gib": d["memory"]["peak_bytes_estimate"] / 2**30,
+        "fits_16gib": d["memory"]["peak_bytes_estimate"] < 16 * 2**30,
+    }
+
+
+def note_for(row: Dict) -> str:
+    """One sentence: what would move the dominant term down."""
+    d = row["dominant"]
+    if d == "collective":
+        return (f"dominated by {row['top_collective']} traffic — reduce by "
+                "re-sharding to keep that tensor local (or overlap it under "
+                "the layer scan)")
+    if d == "memory":
+        return ("HBM-bound — shrink bytes/step: lower-precision storage "
+                "(packed sub-byte weights / bf16 states) or better fusion")
+    return ("compute-bound — raise MXU utilization: larger per-device tiles, "
+            "less recompute (remat policy), fewer wasted FLOPs")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--json", default=str(RESULTS / "roofline.json"))
+    args = ap.parse_args()
+    from repro.configs import ARCH_IDS, SHAPES
+    rows = []
+    for arch in ARCH_IDS:
+        for shape_name in SHAPES:
+            r = analyze_cell(arch, shape_name, args.mesh)
+            if r is not None:
+                if r["status"] == "ok":
+                    r["note"] = note_for(r)
+                rows.append(r)
+    pathlib.Path(args.json).write_text(json.dumps(rows, indent=1))
+
+    hdr = (f"{'arch':<20} {'shape':<12} {'compute_s':>10} {'memory_s':>10} "
+           f"{'collect_s':>10} {'dom':>10} {'M/H':>6} {'peak GiB':>9}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']:<20} {r['shape']:<12} {'—':>10} {'—':>10} "
+                  f"{'—':>10} {r['status']:>10}")
+            continue
+        t = r["terms_s"]
+        print(f"{r['arch']:<20} {r['shape']:<12} {t['compute']:>10.4f} "
+              f"{t['memory']:>10.4f} {t['collective']:>10.4f} "
+              f"{r['dominant']:>10} {r['model_over_hlo']:>6.2f} "
+              f"{r['peak_gib']:>9.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Serving driver: load (or synthesize) a mixed-precision checkpoint and
+run batched generation — the end-to-end consumer of the paper's technique.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-30b-a3b \
+      --smoke --batch 4 --prompt-len 32 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.common import QuantMaker
+from repro.models import transformer as T
+from repro.serve import ServeConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    print(f"building {cfg.name} with quantized weights "
+          f"(proj={cfg.scheme_proj}, ffn={cfg.scheme_ffn})")
+    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(args.seed),
+                                            plan={}))
+    engine = ServingEngine(cfg, params, ServeConfig(
+        max_len=args.prompt_len + args.max_new,
+        temperature=args.temperature))
+
+    rng = np.random.default_rng(args.seed)
+    batch = {"tokens": rng.integers(
+        1, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.full((args.batch, cfg.n_patches, cfg.d_model),
+                                    0.02, jnp.bfloat16)
+    elif cfg.family == "audio":
+        batch["frames"] = jnp.full((args.batch, cfg.n_frames, cfg.d_model),
+                                   0.02, jnp.bfloat16)
+
+    t0 = time.time()
+    out = engine.generate(batch, max_new_tokens=args.max_new, seed=args.seed)
+    dt = time.time() - t0
+    toks = out["generated"].size
+    print(f"generated {out['generated'].shape} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s incl. compile)")
+    print("first rows:", out["generated"][:2, :8].tolist())
+    print(json.dumps({"batch": out["batch"], "prompt_len": out["prompt_len"],
+                      "new_tokens": int(out["generated"].shape[1]),
+                      "wall_s": round(dt, 2)}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,203 @@
+"""Jitted step factories shared by train.py, serve.py and dryrun.py.
+
+Each factory returns (fn, abstract_args, in_shardings, out_shardings,
+donate) so the dry-run can ``jax.jit(fn, ...).lower(*abstract).compile()``
+and the real drivers can call the same jit with concrete arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec, input_specs
+from repro.models.common import AbstractMaker, set_activation_shardings
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.runtime import partitioning as PT
+
+
+def abstract_params(cfg: T.ModelConfig, *, quantize: bool):
+    return T.build_params(cfg, AbstractMaker(quantize=quantize))
+
+
+def _named(mesh, tree):
+    return PT.named(mesh, tree)
+
+
+def _activation_rules(cfg: T.ModelConfig, mesh: Mesh, rules: PT.AxisRules,
+                      batch_size: int, seq_len: int, kind: str):
+    """Pin the per-layer activation layout.
+
+    DP on batch always; for train/prefill the sequence axis additionally
+    shards over 'model' between blocks (Megatron-SP analogue: matmuls and
+    norms stay row-parallel over S; only attention gathers K/V).  This cuts
+    the remat-saved per-layer residuals AND the train logits by model_size.
+    """
+    import numpy as np
+    from jax.sharding import NamedSharding
+    bax = rules.batch_axes
+    bsize = int(np.prod([mesh.shape[a] for a in bax]))
+    if batch_size % bsize != 0:
+        bax = tuple(a for a in bax if batch_size % mesh.shape[a] == 0)[-1:]
+    b = bax if bax else None
+    msz = rules.model_size
+    s_ax = "model" if kind in ("train", "prefill") and seq_len % msz == 0 else None
+    vshard = ("model" if cfg.vocab % msz == 0 else None)
+    if kind == "train":
+        # vocab-sharded logits keep dW = x^T dlogits sharded on V — with
+        # (b, s) both sharded the contraction would otherwise materialize
+        # the FULL f32 [d, V] lm_head gradient per device (17.6 GiB for
+        # nemotron-4-340b).  Falls back to S-sharding for odd vocabs.
+        logits = P(b, None, vshard) if vshard else P(b, s_ax, None)
+    else:
+        logits = P(b, None, vshard)    # [B, 1, V]: shard vocab
+    set_activation_shardings({
+        # between blocks: SP (sequence over 'model') — tiny remat residuals
+        "btd": NamedSharding(mesh, P(b, s_ax, None)),
+        # inside blocks: TP on heads / FFN-hidden — this is what makes GSPMD
+        # do Megatron-SP (gather activations over S, keep weights+grads
+        # TP-sharded) instead of all-gathering the weights per layer
+        "bthd": NamedSharding(mesh, P(b, None, "model", None)),
+        "btf": NamedSharding(mesh, P(b, None, "model")),
+        # attention scores / PV partials in flat-head layout
+        "bhqk": NamedSharding(mesh, P(b, "model", None, None))
+        if kind != "decode" else None,
+        "bhqd": NamedSharding(mesh, P(b, "model", None, None))
+        if kind != "decode" else None,
+        "logits": NamedSharding(mesh, logits),
+    })
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: T.ModelConfig, optim_cfg: AdamWConfig,
+                    grad_shardings=None):
+    n_micro = max(1, cfg.microbatches)
+
+    def pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            tree, grad_shardings)
+
+    def grad_of(params, batch):
+        def loss(p):
+            return T.loss_fn(cfg, p, batch)
+        return jax.value_and_grad(loss, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (l, metrics), grads = grad_of(params, batch)
+            grads = pin(grads)
+        else:
+            # gradient accumulation: peak activation memory / n_micro at the
+            # cost of repeating the FSDP weight gathers per microbatch —
+            # the right trade for the memory-bound big-model cells.
+            acc_dtype = optim_cfg.moment_dtype
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+
+            def body(carry, mbatch):
+                gacc, lacc = carry
+                (l, _), g = grad_of(params, mbatch)
+                gacc = pin(jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), gacc, g))
+                return (gacc, lacc + l), None
+
+            g0 = pin(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dtype)
+                if jnp.issubdtype(p.dtype, jnp.floating)
+                else jnp.zeros(p.shape, p.dtype), params))
+            (gacc, lsum), _ = jax.lax.scan(body, (g0, jnp.float32(0.0)), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, gacc)
+            l = lsum / n_micro
+            metrics = {"xent": l, "aux": jnp.float32(0.0),
+                       "zloss": jnp.float32(0.0)}
+        new_params, new_opt, om = adamw_update(params, grads, opt_state,
+                                               optim_cfg)
+        return new_params, new_opt, {**metrics, **om, "loss": l}
+    return train_step
+
+
+def train_cell(cfg: T.ModelConfig, shape: ShapeSpec, mesh: Mesh,
+               optim_cfg: Optional[AdamWConfig] = None):
+    """(fn, abstract args, in_shardings, out_shardings, donate) for train."""
+    optim_cfg = optim_cfg or AdamWConfig(
+        moment_dtype=jnp.bfloat16 if cfg.name.startswith("nemotron-4") else jnp.float32)
+    rules = PT.rules_from_mesh(mesh, train=True)
+    params = abstract_params(cfg, quantize=False)
+    opt_state = jax.eval_shape(lambda p: adamw_init(p, optim_cfg), params)
+    batch = input_specs(cfg, shape)["batch"]
+
+    pspec = PT.param_specs(cfg, mesh, train=True, quantize=False)
+    opt_spec = type(opt_state)(P(), pspec, pspec)  # ZeRO-3: like params
+    bspec_all = PT.batch_pspec(cfg, rules, shape.global_batch, mesh)
+    bspec = {k: bspec_all[k] for k in batch}
+
+    _activation_rules(cfg, mesh, rules, shape.global_batch, shape.seq_len,
+                      "train")
+    fn = make_train_step(cfg, optim_cfg, grad_shardings=_named(mesh, pspec))
+    in_sh = ( _named(mesh, pspec), _named(mesh, opt_spec), _named(mesh, bspec))
+    out_sh = (_named(mesh, pspec), _named(mesh, opt_spec), None)
+    return fn, (params, opt_state, batch), in_sh, out_sh, (0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Serve steps (prefill / decode)
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: T.ModelConfig):
+    def prefill(params, batch, cache):
+        logits, _, cache = T.forward(cfg, params, batch, cache=cache,
+                                     cache_index=0, mode="prefill")
+        return logits[:, -1:], cache
+    return prefill
+
+
+def make_decode_step(cfg: T.ModelConfig):
+    def decode(params, batch, cache, index):
+        logits, _, cache = T.forward(cfg, params, batch, cache=cache,
+                                     cache_index=index, mode="decode")
+        return logits, cache
+    return decode
+
+
+def serve_cell(cfg: T.ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    """(fn, abstract args, in/out shardings, donate) for prefill/decode."""
+    rules = PT.rules_from_mesh(mesh, train=False)
+    params = abstract_params(cfg, quantize=True)
+    specs = input_specs(cfg, shape)
+    batch, cache = specs["batch"], specs["cache"]
+
+    pspec = PT.param_specs(cfg, mesh, train=False, quantize=True)
+    bspec_all = PT.batch_pspec(cfg, rules, shape.global_batch, mesh)
+    bspec = {k: bspec_all.get(k, P(None, None, None)) for k in batch}
+    cspec = PT.cache_pspec(cfg, rules, shape.global_batch, mesh)
+    logit_spec = None   # let GSPMD choose (vocab-model-sharded upstream)
+    _activation_rules(cfg, mesh, rules, shape.global_batch, shape.seq_len,
+                      shape.kind)
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        in_sh = (_named(mesh, pspec), _named(mesh, bspec), _named(mesh, cspec))
+        out_sh = (logit_spec, _named(mesh, cspec))
+        return fn, (params, batch, cache), in_sh, out_sh, (2,)
+
+    fn = make_decode_step(cfg)
+    index = specs["index"]
+    in_sh = (_named(mesh, pspec), _named(mesh, bspec), _named(mesh, cspec),
+             _named(mesh, P()))
+    out_sh = (logit_spec, _named(mesh, cspec))
+    return fn, (params, batch, cache, index), in_sh, out_sh, (2,)
+
+
+def build_cell(cfg: T.ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    if shape.kind == "train":
+        return train_cell(cfg, shape, mesh)
+    return serve_cell(cfg, shape, mesh)

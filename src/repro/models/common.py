@@ -1,0 +1,311 @@
+"""Shared model-layer machinery.
+
+Central idea: every architecture's parameter tree is built by ONE structure
+walker driven by a ``Maker``.  Four makers produce, from the same walk:
+  * InitMaker      real bf16 dense parameters (training / smoke tests)
+  * QuantMaker     real quantized parameters (packed codes + scales) via the
+                   offline numpy quantizer — mixed-precision serving
+  * AbstractMaker  jax.ShapeDtypeStruct trees (dry-run: zero allocation)
+  * PspecMaker     jax.sharding.PartitionSpec trees (pjit annotations)
+so parameter structure, quantization plan, and sharding can never drift.
+
+Quantized linears are ``QLinear`` pytree nodes: children = (packed, scales),
+static aux = (scheme name, logical shape) — jit/scan/pjit-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.ops import quantized_matmul
+from repro.quant.schemes import (
+    QuantScheme, QuantizedLinearWeights, get_scheme, quantize_weights,
+)
+
+
+@jax.tree_util.register_pytree_node_class
+class QLinear:
+    """Quantized linear weights as a pytree node (packed codes + scales)."""
+
+    def __init__(self, packed, scales, scheme_name: str, shape: Tuple[int, int]):
+        self.packed = packed
+        self.scales = scales
+        self.scheme_name = scheme_name
+        self.shape = tuple(shape)
+
+    def tree_flatten(self):
+        return (self.packed, self.scales), (self.scheme_name, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+    def __repr__(self):
+        return f"QLinear({self.scheme_name}, {self.shape})"
+
+
+# global switch: Pallas kernels (interpret on CPU) vs pure-jnp reference path
+_USE_KERNEL = {"value": False}
+
+
+def set_use_kernel(flag: bool) -> None:
+    _USE_KERNEL["value"] = flag
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (set by launch/steps.py before tracing).
+# Without these GSPMD may propagate FSDP *storage* shardings into the
+# computation (e.g. batch replicated, d_model sharded) — constraining the
+# per-layer activation layout pins DP on batch and lets the compiler insert
+# the FSDP all-gathers on weights instead.
+# ---------------------------------------------------------------------------
+_ACT_SHARDINGS = {"rules": None}
+
+
+def set_activation_shardings(rules) -> None:
+    """rules: dict kind -> NamedSharding (e.g. {'btd': ..., 'logits': ...})
+    or None to disable."""
+    _ACT_SHARDINGS["rules"] = rules
+
+
+def shard_act(x, kind: str):
+    rules = _ACT_SHARDINGS["rules"]
+    if rules is None or kind not in rules or rules[kind] is None:
+        return x
+    s = rules[kind]
+    if x.ndim != len(s.spec):
+        return x
+    # strip axes whose size doesn't divide the dim (e.g. 4 KV heads on a
+    # 16-way model axis stay replicated)
+    mesh = s.mesh
+    parts = []
+    changed = False
+    for dim, ax in enumerate(s.spec):
+        if ax is None:
+            parts.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if x.shape[dim] % size == 0 and x.shape[dim] >= size:
+            parts.append(ax)
+        else:
+            parts.append(None)
+            changed = True
+    if changed:
+        from jax.sharding import NamedSharding, PartitionSpec
+        s = NamedSharding(mesh, PartitionSpec(*parts))
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def apply_linear(leaf, x, out_dtype=jnp.bfloat16):
+    """x [..., K] @ linear leaf -> [..., N]; dispatches dense vs quantized.
+
+    Dots are bf16-storage: the TPU MXU accumulates in f32 natively, and
+    requesting an f32 result dtype makes the CPU backend (the dry-run
+    instrument) materialize f32 copies of the weights per use.
+    """
+    if isinstance(leaf, QLinear):
+        qw = QuantizedLinearWeights(
+            get_scheme(leaf.scheme_name), leaf.packed, leaf.scales, leaf.shape
+        )
+        return quantized_matmul(x, qw, use_kernel=_USE_KERNEL["value"],
+                                out_dtype=out_dtype)
+    return jnp.dot(x.astype(leaf.dtype), leaf).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Makers
+# ---------------------------------------------------------------------------
+class Maker:
+    """Builds parameter leaves.  ``stack`` = leading layer-stack dims ()/(L,)."""
+
+    def dense(self, name: str, stack: Tuple[int, ...], k: int, n: int,
+              scheme: Optional[str] = None):
+        raise NotImplementedError
+
+    def table(self, name: str, stack: Tuple[int, ...], rows: int, cols: int,
+              scale: float = 0.02):
+        raise NotImplementedError
+
+    def norm(self, name: str, stack: Tuple[int, ...], dim: int):
+        raise NotImplementedError
+
+    def vector(self, name: str, stack: Tuple[int, ...], dim: int,
+               init: float = 0.0):
+        raise NotImplementedError
+
+
+class InitMaker(Maker):
+    """Real dense bf16 parameters (ignores quantization schemes)."""
+
+    def __init__(self, key, dtype=jnp.bfloat16):
+        self._key = key
+        self.dtype = dtype
+
+    def _next(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def dense(self, name, stack, k, n, scheme=None):
+        w = jax.random.normal(self._next(), stack + (k, n), jnp.float32)
+        return (w / np.sqrt(k)).astype(self.dtype)
+
+    def table(self, name, stack, rows, cols, scale=0.02):
+        return (jax.random.normal(self._next(), stack + (rows, cols),
+                                  jnp.float32) * scale).astype(self.dtype)
+
+    def norm(self, name, stack, dim):
+        return jnp.ones(stack + (dim,), jnp.float32)
+
+    def vector(self, name, stack, dim, init=0.0):
+        return jnp.full(stack + (dim,), init, jnp.float32)
+
+
+class QuantMaker(InitMaker):
+    """Real quantized parameters: dense init -> offline numpy quantizer."""
+
+    def __init__(self, key, plan: Dict[str, str], dtype=jnp.bfloat16):
+        super().__init__(key, dtype)
+        self.plan = plan  # name-class -> scheme name (None/'bf16' = dense)
+
+    def dense(self, name, stack, k, n, scheme=None):
+        scheme = scheme if scheme is not None else "bf16"
+        if scheme == "bf16":
+            return super().dense(name, stack, k, n)
+        w = np.asarray(
+            jax.random.normal(self._next(), stack + (k, n), jnp.float32)
+        ) / np.sqrt(k)
+        if stack:
+            flat = w.reshape((-1, k, n))
+            qws = [quantize_weights(get_scheme(scheme), flat[i])
+                   for i in range(flat.shape[0])]
+            packed = jnp.stack([q.packed for q in qws]).reshape(
+                stack + qws[0].packed.shape)
+            scales = jnp.stack([q.scales for q in qws]).reshape(
+                stack + qws[0].scales.shape)
+        else:
+            q = quantize_weights(get_scheme(scheme), w)
+            packed, scales = q.packed, q.scales
+        return QLinear(packed, scales, scheme, (k, n))
+
+
+class AbstractMaker(Maker):
+    """ShapeDtypeStruct trees — dry-run parameter specs, zero allocation."""
+
+    def __init__(self, quantize: bool = True, dtype=jnp.bfloat16):
+        self.quantize = quantize
+        self.dtype = dtype
+
+    def dense(self, name, stack, k, n, scheme=None):
+        if scheme is None or scheme == "bf16" or not self.quantize:
+            return jax.ShapeDtypeStruct(stack + (k, n), self.dtype)
+        s = get_scheme(scheme)
+        from repro.quant.schemes import effective_group
+        group = effective_group(s.group_size, k)
+        if s.packed:
+            per = 32 // s.weight_bits
+            packed = jax.ShapeDtypeStruct(stack + (k // per, n), jnp.int32)
+        else:  # w8a8 raw int8
+            packed = jax.ShapeDtypeStruct(stack + (k, n), jnp.int8)
+        scales = jax.ShapeDtypeStruct(stack + (k // group, n), jnp.float32)
+        return QLinear(packed, scales, scheme, (k, n))
+
+    def table(self, name, stack, rows, cols, scale=0.02):
+        return jax.ShapeDtypeStruct(stack + (rows, cols), self.dtype)
+
+    def norm(self, name, stack, dim):
+        return jax.ShapeDtypeStruct(stack + (dim,), jnp.float32)
+
+    def vector(self, name, stack, dim, init=0.0):
+        return jax.ShapeDtypeStruct(stack + (dim,), jnp.float32)
+
+
+class PspecMaker(Maker):
+    """PartitionSpec trees.  Axis names resolved via a rule callback
+    mapping the logical axes of each leaf to mesh axes."""
+
+    def __init__(self, rule: Callable[[str, int], Optional[str]],
+                 quantize: bool = True):
+        self.rule = rule      # (leaf_name, logical_dim_index) -> mesh axis
+        self.quantize = quantize
+
+    def _spec(self, name, stack, dims: int) -> P:
+        parts = [None] * len(stack) + [self.rule(name, d) for d in range(dims)]
+        return P(*parts)
+
+    def dense(self, name, stack, k, n, scheme=None):
+        if scheme is None or scheme == "bf16" or not self.quantize:
+            return self._spec(name, stack, 2)
+        # packed codes and scales have different K-dim sizes than the
+        # logical weight; the rule sees them under suffixed names so
+        # divisibility is checked against the actual array dims
+        spec_p = self._spec(name + "@packed", stack, 2)
+        spec_s = self._spec(name + "@scales", stack, 2)
+        return QLinear(spec_p, spec_s, scheme, (k, n))
+
+    def table(self, name, stack, rows, cols, scale=0.02):
+        return self._spec(name, stack, 2)
+
+    def norm(self, name, stack, dim):
+        return P(*([None] * len(stack) + [self.rule(name, 0)]))
+
+    def vector(self, name, stack, dim, init=0.0):
+        return P(*([None] * len(stack) + [self.rule(name, 0)]))
+
+
+# ---------------------------------------------------------------------------
+# Numerics helpers
+# ---------------------------------------------------------------------------
+def rms_norm(x, gamma, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * gamma).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta).astype(x.dtype)
+
+
+def activate(kind: str, x):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":  # nemotron squared-ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def rope_frequencies(d_head: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x [..., S, H, D]; positions [..., S] int32 -> rotated x (same dtype)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # [D/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, dim: int):
+    pos = np.arange(n_pos)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    emb = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)

@@ -1,0 +1,439 @@
+"""State-space / linear-recurrence layers: Mamba-2 (SSD), mLSTM, sLSTM.
+
+One chunked engine serves both Mamba-2 and mLSTM, because both are matrix-
+state linear recurrences
+    H_t = exp(lf_t) * H_{t-1} + exp(li_t) * k_t v_t^T
+    y_t = q_t . H_t                      (optionally normalized, mLSTM)
+with per-head scalar log-decay lf <= 0 and log-gain li.  The chunked form
+(SSD, Dao & Gu 2024) computes intra-chunk contributions as a masked
+attention-like matmul and carries the state across chunks with a
+``lax.scan`` — sub-quadratic in S and MXU-friendly, which is what makes the
+``long_500k`` shapes runnable for the SSM/hybrid architectures.
+
+mLSTM additionally tracks a normalizer state n_t = decay(n_{t-1}) + gain*k_t
+and a log-stabilizer m (exponential input gating); outputs are
+y = (q.H) / max(|q.n|, 1) in unscaled units — invariant to the stabilizer,
+which is how the chunked path can use per-chunk cummax stabilizers while the
+naive oracle uses the sequential ones.
+
+Exactness: tests assert chunked == naive scan within fp32 tolerance for both
+modes, and decode-step consistency against the parallel form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Maker, apply_linear, rms_norm, shard_act
+
+
+class SSMState(NamedTuple):
+    """Carried recurrence state.  true_H = Hs * exp(m[..., None, None])."""
+    Hs: jnp.ndarray   # [B, nh, dk, dv] scaled matrix state
+    ns: jnp.ndarray   # [B, nh, dk]     scaled normalizer state
+    m: jnp.ndarray    # [B, nh]         log stabilizer
+
+
+def init_state(b, nh, dk, dv, dtype=jnp.float32) -> SSMState:
+    return SSMState(jnp.zeros((b, nh, dk, dv), dtype),
+                    jnp.zeros((b, nh, dk), dtype),
+                    jnp.full((b, nh), 0.0, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Naive sequential oracle (exact; tests + tiny decode)
+# ---------------------------------------------------------------------------
+def ssd_naive(q, k, v, lf, li, *, normalize: bool, state: Optional[SSMState] = None):
+    """q,k [B,S,nh,dk]; v [B,S,nh,dv]; lf,li [B,S,nh] -> y [B,S,nh,dv], state."""
+    b, s, nh, dk = q.shape
+    dv = v.shape[-1]
+    st = state if state is not None else init_state(b, nh, dk, dv)
+
+    def step(carry: SSMState, inp):
+        qt, kt, vt, lft, lit = inp  # [B,nh,dk] etc., [B,nh]
+        Hs, ns, m = carry
+        m_new = jnp.maximum(lft + m, lit) if normalize else jnp.zeros_like(m)
+        decay = jnp.exp(lft + m - m_new)[..., None]
+        gain = jnp.exp(lit - m_new)[..., None]
+        Hs = decay[..., None] * Hs + (gain * kt)[..., None] * vt[..., None, :]
+        ns = decay * ns + gain * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt, Hs)
+        if normalize:
+            den = jnp.abs(jnp.einsum("bhk,bhk->bh", qt, ns))
+            den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+            y = num / den
+        else:
+            y = num
+        return SSMState(Hs, ns, m_new), y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (q, k, v, lf, li))
+    st, ys = jax.lax.scan(step, st, xs)
+    return jnp.moveaxis(ys, 0, 1), st
+
+
+def ssd_step(state: SSMState, qt, kt, vt, lft, lit, *, normalize: bool):
+    """Single decode step; same math as one ssd_naive iteration."""
+    (st, y) = _single_step(state, qt, kt, vt, lft, lit, normalize)
+    return y, st
+
+
+def _single_step(carry, qt, kt, vt, lft, lit, normalize):
+    Hs, ns, m = carry
+    qt, kt, vt = (a.astype(jnp.float32) for a in (qt, kt, vt))
+    m_new = jnp.maximum(lft + m, lit) if normalize else jnp.zeros_like(m)
+    decay = jnp.exp(lft + m - m_new)[..., None]
+    gain = jnp.exp(lit - m_new)[..., None]
+    Hs = decay[..., None] * Hs + (gain * kt)[..., None] * vt[..., None, :]
+    ns = decay * ns + gain * kt
+    num = jnp.einsum("bhk,bhkv->bhv", qt, Hs)
+    if normalize:
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", qt, ns))
+        den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        y = num / den
+    else:
+        y = num
+    return SSMState(Hs, ns, m_new), y
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD (the parallel training/prefill path)
+# ---------------------------------------------------------------------------
+def ssd_chunked(q, k, v, lf, li, *, chunk: int = 128, normalize: bool = False,
+                state: Optional[SSMState] = None):
+    """Chunked scan; identical math to ``ssd_naive`` (fp32 tolerance)."""
+    b, s, nh, dk = q.shape
+    dv = v.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    st = state if state is not None else init_state(b, nh, dk, dv)
+
+    def chunk_of(a):
+        a = a.astype(jnp.float32).reshape(b, nc, chunk, *a.shape[2:])
+        return jnp.moveaxis(a, 1, 0)  # [nc, B, C, ...]
+
+    qs, ks, vs, lfs, lis = map(chunk_of, (q, k, v, lf, li))
+
+    def body(carry: SSMState, inp):
+        qc, kc, vc, lfc, lic = inp     # [B,C,nh,*], [B,C,nh]
+        Hs, ns, m = carry
+        L = jnp.cumsum(lfc, axis=1)                     # [B,C,nh] inclusive
+        Ltot = L[:, -1]                                 # [B,nh]
+
+        if normalize:
+            # per-step stabilizer s_t = L_t + max(m, cummax_{j<=t}(li_j - L_j))
+            cmx = jax.lax.cummax(lic - L, axis=1)
+            base = jnp.maximum(m[:, None], cmx)         # [B,C,nh]
+        else:
+            base = jnp.zeros_like(L)
+
+        # intra-chunk: W[t,j] = exp(li_j - L_j - base_t + L_t) for j <= t
+        expo = (lic - L)[:, None, :, :] + (L - base)[:, :, None, :]  # [B,t,j,nh]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        W = jnp.where(tri[None, :, :, None], jnp.exp(expo), 0.0)
+        scores = jnp.einsum("bthd,bjhd->btjh", qc, kc)
+        intra = jnp.einsum("btjh,bjhv->bthv", scores * W, vc)
+        intra_n = jnp.einsum("btjh,btjh->bth", scores, W)  # q.n intra part
+
+        # inter: q_t . H_prev_true * exp(L_t) in the same scaled units
+        inter_scale = jnp.exp(m[:, None] + L - base)        # [B,C,nh]
+        inter = jnp.einsum("bthd,bhdv->bthv", qc, Hs) * inter_scale[..., None]
+        inter_n = jnp.einsum("bthd,bhd->bth", qc, ns) * inter_scale
+
+        num = inter + intra
+        if normalize:
+            # num/den are in units of exp(base_t) (both carry an extra
+            # exp(L_t) relative to the exp(-s_t) scaling — it cancels);
+            # the unscaled-1 clamp is therefore exp(-base_t).
+            den = jnp.maximum(jnp.abs(inter_n + intra_n), jnp.exp(-base))
+            y = num / den[..., None]
+        else:
+            y = num
+
+        # state update to chunk end
+        g = lic + (Ltot[:, None] - L)                   # [B,C,nh]
+        if normalize:
+            m_loc = jnp.max(g, axis=1)                  # [B,nh]
+            m_new = jnp.maximum(m + Ltot, m_loc)
+        else:
+            m_new = jnp.zeros_like(m)
+        kg = kc * jnp.exp(g - m_new[:, None])[..., None]
+        Hs_new = Hs * jnp.exp(m + Ltot - m_new)[..., None, None] + \
+            jnp.einsum("bthd,bthv->bhdv", kg, vc)
+        ns_new = ns * jnp.exp(m + Ltot - m_new)[..., None] + kg.sum(axis=1)
+        return SSMState(Hs_new, ns_new, m_new), y
+
+    st, ys = jax.lax.scan(body, st, (qs, ks, vs, lfs, lis))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, nh, dv)
+    return y, st
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (Mamba front conv), width-w, with decode state
+# ---------------------------------------------------------------------------
+def causal_conv1d(x, w_conv, conv_state=None):
+    """x [B,S,C]; w_conv [W,C] depthwise.  conv_state [B,W-1,C] for decode.
+    Returns (y [B,S,C], new_state [B,W-1,C])."""
+    width = w_conv.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    ext = jnp.concatenate([conv_state, x], axis=1)         # [B, S+W-1, C]
+    y = sum(ext[:, i:i + x.shape[1]] * w_conv[i][None, None, :]
+            for i in range(width))
+    new_state = ext[:, ext.shape[1] - (width - 1):]
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block (zamba2 backbone)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    d_head: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+    scheme: Optional[str] = None
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.d_head
+
+
+def mamba2_params(mk: Maker, cfg: Mamba2Config, stack) -> Dict[str, Any]:
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    # Projections split by tensor-parallel role: z/x/dt are head-aligned
+    # (shardable over 'model'); B/C are shared across heads (replicated) —
+    # the Megatron-style TP layout for Mamba-2.
+    return {
+        "w_zx": mk.dense("ssm.w_zx", stack, d, 2 * di, scheme=cfg.scheme),
+        "w_bc": mk.dense("ssm.w_bc", stack, d, 2 * ds, scheme=cfg.scheme),
+        "w_dt": mk.dense("ssm.w_dt", stack, d, nh, scheme=None),
+        "conv_x": mk.table("ssm.conv_x", stack, cfg.conv_width, di, scale=0.5),
+        "conv_bc": mk.table("ssm.conv_bc", stack, cfg.conv_width, 2 * ds, scale=0.5),
+        "A_log": mk.vector("ssm.A_log", stack, nh, init=0.0),
+        "dt_bias": mk.vector("ssm.dt_bias", stack, nh, init=0.0),
+        "D": mk.vector("ssm.D", stack, nh, init=1.0),
+        "norm": mk.norm("ssm.norm", stack, di),
+        "w_out": mk.dense("ssm.w_out", stack, di, d, scheme=cfg.scheme),
+    }
+
+
+def mamba2_forward(params, cfg: Mamba2Config, x, *, state=None, conv_state=None,
+                   chunked: bool = True):
+    """x [B,S,D] -> (y [B,S,D], (ssm_state, conv_state))."""
+    b, s, _ = x.shape
+    di, ds, nh, dh = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.d_head
+    zx = shard_act(apply_linear(params["w_zx"], x), "btf")
+    z, xc = jnp.split(zx, 2, axis=-1)
+    bc = apply_linear(params["w_bc"], x)
+    dt = apply_linear(params["w_dt"], x)
+
+    cs_x = conv_state[0] if conv_state is not None else None
+    cs_bc = conv_state[1] if conv_state is not None else None
+    xc, new_conv_x = causal_conv1d(xc, params["conv_x"], cs_x)
+    bc, new_conv_bc = causal_conv1d(bc, params["conv_bc"], cs_bc)
+    new_conv = (new_conv_x, new_conv_bc)
+    xc = jax.nn.silu(xc.astype(jnp.float32))
+    bc = jax.nn.silu(bc.astype(jnp.float32))
+    Bc, Cc = jnp.split(bc, 2, axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # [B,S,nh]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))                   # [nh] < 0
+    lf = dt * A                                                          # log decay
+    li = jnp.log(jnp.maximum(dt, 1e-9))                                  # log gain
+
+    q = jnp.broadcast_to(Cc[:, :, None, :], (b, s, nh, ds))
+    k = jnp.broadcast_to(Bc[:, :, None, :], (b, s, nh, ds))
+    v = xc.reshape(b, s, nh, dh)
+
+    if s == 1 and state is not None:
+        y, new_state = ssd_step(state, q[:, 0], k[:, 0], v[:, 0],
+                                lf[:, 0], li[:, 0], normalize=False)
+        y = y[:, None]
+    elif chunked and s % cfg.chunk == 0 and s > cfg.chunk:
+        y, new_state = ssd_chunked(q, k, v, lf, li, chunk=cfg.chunk,
+                                   normalize=False, state=state)
+    else:
+        y, new_state = ssd_naive(q, k, v, lf, li, normalize=False, state=state)
+
+    y = y + params["D"][None, None, :, None] * v.astype(jnp.float32)
+    y = y.reshape(b, s, di)
+    y = rms_norm(y.astype(jnp.bfloat16), params["norm"]) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(jnp.bfloat16)
+    return apply_linear(params["w_out"], y), (new_state, new_conv)
+
+
+def mamba2_state_spec(cfg: Mamba2Config, batch: int):
+    nh, ds, dh = cfg.n_heads, cfg.d_state, cfg.d_head
+    return (
+        SSMState(jax.ShapeDtypeStruct((batch, nh, ds, dh), jnp.float32),
+                 jax.ShapeDtypeStruct((batch, nh, ds), jnp.float32),
+                 jax.ShapeDtypeStruct((batch, nh), jnp.float32)),
+        (jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, cfg.d_inner), jnp.bfloat16),
+         jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, 2 * cfg.d_state), jnp.bfloat16)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128
+    scheme: Optional[str] = None
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def d_head(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+def mlstm_params(mk: Maker, cfg: MLSTMConfig, stack) -> Dict[str, Any]:
+    d, di, nh = cfg.d_model, cfg.d_inner, cfg.n_heads
+    return {
+        "w_up": mk.dense("ssm.w_up", stack, d, 2 * di, scheme=cfg.scheme),  # [x, z]
+        "conv_w": mk.table("ssm.conv_w", stack, cfg.conv_width, di, scale=0.5),
+        "w_q": mk.dense("ssm.w_q", stack, di, di, scheme=cfg.scheme),
+        "w_k": mk.dense("ssm.w_k", stack, di, di, scheme=cfg.scheme),
+        "w_v": mk.dense("ssm.w_v", stack, di, di, scheme=cfg.scheme),
+        "w_if": mk.dense("ssm.w_if", stack, di, 2 * nh, scheme=None),  # gates bf16
+        "if_bias": mk.vector("ssm.if_bias", stack, 2 * nh, init=0.0),
+        "norm": mk.norm("ssm.norm", stack, di),
+        "w_out": mk.dense("ssm.w_out", stack, di, d, scheme=cfg.scheme),
+    }
+
+
+def mlstm_forward(params, cfg: MLSTMConfig, x, *, state=None, conv_state=None,
+                  chunked: bool = True):
+    b, s, _ = x.shape
+    di, nh, dh = cfg.d_inner, cfg.n_heads, cfg.d_head
+    up = shard_act(apply_linear(params["w_up"], x), "btf")
+    xi, z = jnp.split(up, 2, axis=-1)
+    conv_out, new_conv = causal_conv1d(xi, params["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(jnp.bfloat16)
+
+    q = apply_linear(params["w_q"], conv_out).reshape(b, s, nh, dh)
+    k = apply_linear(params["w_k"], conv_out).reshape(b, s, nh, dh) / jnp.sqrt(float(dh))
+    v = apply_linear(params["w_v"], xi).reshape(b, s, nh, dh)
+    gates = apply_linear(params["w_if"], conv_out, out_dtype=jnp.float32) + params["if_bias"]
+    i_gate, f_gate = jnp.split(gates, 2, axis=-1)        # [B,S,nh]
+    lf = jax.nn.log_sigmoid(f_gate)
+    li = i_gate                                           # exponential input gate
+
+    if s == 1 and state is not None:
+        y, new_state = ssd_step(state, q[:, 0], k[:, 0], v[:, 0],
+                                lf[:, 0], li[:, 0], normalize=True)
+        y = y[:, None]
+    elif chunked and s % cfg.chunk == 0 and s > cfg.chunk:
+        y, new_state = ssd_chunked(q, k, v, lf, li, chunk=cfg.chunk,
+                                   normalize=True, state=state)
+    else:
+        y, new_state = ssd_naive(q, k, v, lf, li, normalize=True, state=state)
+
+    y = y.reshape(b, s, di)
+    y = rms_norm(y.astype(jnp.bfloat16), params["norm"]) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(jnp.bfloat16)
+    return apply_linear(params["w_out"], y), (new_state, new_conv)
+
+
+def mlstm_state_spec(cfg: MLSTMConfig, batch: int):
+    nh, dh = cfg.n_heads, cfg.d_head
+    return (
+        SSMState(jax.ShapeDtypeStruct((batch, nh, dh, dh), jnp.float32),
+                 jax.ShapeDtypeStruct((batch, nh, dh), jnp.float32),
+                 jax.ShapeDtypeStruct((batch, nh), jnp.float32)),
+        jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, cfg.d_inner), jnp.bfloat16),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM): scalar recurrence with per-head recurrent mixing
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    scheme: Optional[str] = None
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def slstm_params(mk: Maker, cfg: SLSTMConfig, stack) -> Dict[str, Any]:
+    d, nh, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    return {
+        "w_gates": mk.dense("ssm.w_gates", stack, d, 4 * d, scheme=cfg.scheme),
+        # per-head block-diagonal recurrent matrices, one per gate
+        "r_gates": mk.table("ssm.r_gates", stack + (4, nh), dh, dh, scale=0.02),
+        "b_gates": mk.vector("ssm.b_gates", stack, 4 * d, init=0.0),
+        "norm": mk.norm("ssm.norm", stack, d),
+        "w_out": mk.dense("ssm.w_out", stack, d, d, scheme=cfg.scheme),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray   # [B, D] cell
+    n: jnp.ndarray   # [B, D] normalizer
+    h: jnp.ndarray   # [B, D] hidden (recurrent input)
+    m: jnp.ndarray   # [B, D] stabilizer
+
+
+def slstm_init_state(b, d):
+    return SLSTMState(*(jnp.zeros((b, d), jnp.float32) for _ in range(4)))
+
+
+def _slstm_step(params, cfg: SLSTMConfig, st: SLSTMState, wx_t):
+    """wx_t = W x_t [B, 4D] precomputed; returns (state, h_out [B, D])."""
+    b = wx_t.shape[0]
+    d, nh, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    h_heads = st.h.reshape(b, nh, dh)
+    rh = jnp.einsum("bhd,ghde->bghe", h_heads, params["r_gates"].astype(jnp.float32))
+    rh = rh.reshape(b, 4 * d)
+    zif = wx_t.astype(jnp.float32) + rh + params["b_gates"]
+    z_t, i_t, f_t, o_t = jnp.split(zif, 4, axis=-1)
+    z_t = jnp.tanh(z_t)
+    o_t = jax.nn.sigmoid(o_t)
+    lf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(lf + st.m, i_t)
+    c_new = jnp.exp(lf + st.m - m_new) * st.c + jnp.exp(i_t - m_new) * z_t
+    n_new = jnp.exp(lf + st.m - m_new) * st.n + jnp.exp(i_t - m_new)
+    h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(params, cfg: SLSTMConfig, x, *, state: Optional[SLSTMState] = None):
+    """x [B,S,D] -> (y [B,S,D], state).  Sequential lax.scan over S."""
+    b, s, d = x.shape
+    st = state if state is not None else slstm_init_state(b, d)
+    wx = apply_linear(params["w_gates"], x, out_dtype=jnp.float32)  # [B,S,4D]
+
+    def step(carry, wx_t):
+        return _slstm_step(params, cfg, carry, wx_t)
+
+    st, hs = jax.lax.scan(step, st, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(jnp.bfloat16)
+    y = rms_norm(y, params["norm"])
+    return apply_linear(params["w_out"], y), st
+
+
+def slstm_state_spec(cfg: SLSTMConfig, batch: int):
+    d = cfg.d_model
+    return SLSTMState(*(jax.ShapeDtypeStruct((batch, d), jnp.float32)
+                        for _ in range(4)))

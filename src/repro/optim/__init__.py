@@ -1,0 +1,9 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from .compression import (CompressionState, compress_decompress,
+                          compressed_psum, init_compression)
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+    "CompressionState", "compress_decompress", "compressed_psum",
+    "init_compression",
+]

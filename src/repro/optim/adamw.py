@@ -1,0 +1,101 @@
+"""AdamW with configurable moment dtype, global-norm clipping, cosine LR.
+
+``moment_dtype=bf16`` is the 8-bit-Adam-style memory posture required for
+nemotron-4-340b on 256 x 16 GB chips (DESIGN.md §6): fp32 moments would
+need 18.6 GB/chip.  Moments are stored in ``moment_dtype`` but the update
+math runs in fp32 (cast up, update, cast down).
+
+Optimizer state is a pytree with the same structure as params, so the
+FSDP partition specs apply verbatim (ZeRO-3: state sharded like weights).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: Any = jnp.float32     # jnp.bfloat16 for the 340B posture
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray    # scalar int32
+    mu: Any              # first moments  (params-shaped)
+    nu: Any              # second moments (params-shaped)
+
+
+def _float_leaves(tree):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.issubdtype(p.dtype, jnp.floating), tree)
+
+
+def adamw_init(params, cfg: AdamWConfig) -> OptState:
+    def zeros():
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating)
+            else jnp.zeros((), jnp.int8),
+            params)
+    # mu and nu must be DISTINCT buffers (donation aliases by buffer)
+    return OptState(jnp.zeros((), jnp.int32), zeros(), zeros())
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(grads):
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree_util.tree_leaves(grads)
+              if jnp.issubdtype(g.dtype, jnp.floating)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(params, grads, state: OptState, cfg: AdamWConfig):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr = cosine_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1t = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        if not jnp.issubdtype(p.dtype, jnp.floating):
+            return p, mu, nu
+        g = g.astype(jnp.float32) * scale
+        mu_f = mu.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        nu_f = nu.astype(jnp.float32) * cfg.b2 + g * g * (1 - cfg.b2)
+        upd = (mu_f / b1t) / (jnp.sqrt(nu_f / b2t) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return new_p, mu_f.astype(cfg.moment_dtype), nu_f.astype(cfg.moment_dtype)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state.mu)
+    flat_nu = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(step, new_mu, new_nu), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,146 @@
+"""Analytical end-to-end LLM inference simulator (paper §VI-D, Figs. 1/14).
+
+Follows the framework of Chen et al. [7]: transformer decode is alternating
+memory phases (weight streaming from HBM) and compute phases (MAC-array
+limited), with idealized streaming and on-chip activation reuse:
+
+    t_layer = max( weight_bytes / BW,  batch * MACs / (units * freq) )
+
+The MAC-unit count is the resource-budget quotient over the *per-operation*
+LUT/FF/DSP cost of the arithmetic unit — which is exactly where XtraMAC's
+density advantage (Table IV/V) enters: same fabric, more MAC lanes.  The
+baseline instantiates the AMD FP-Operator profiles; XtraMAC swaps in its
+per-lane costs.  Everything else (checkpoint MAC counts, datatype split,
+tiling) is held fixed, so Fig. 14's deltas isolate arithmetic-unit density.
+
+MAC counting per decode token (context L):
+  projections/FFN (quantized):  2 * N_proj_params   MACs  (scheme datatype)
+  attention QK^T + PV (BF16):   2 * 2 * L * H * dh * n_layers
+  MoE: only top-k (+shared) expert params are active.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.core.resource_model import Resources, TABLE_IV, TABLE_V
+from repro.models.transformer import ModelConfig
+from .hardware import FPGAProfile, V80
+
+
+# Every deployment must execute BOTH the scheme's quantized MACs
+# (projections/FFN) and BF16 MACs (attention) at runtime.  The vendor
+# baseline does this by SPATIAL REPLICATION (both datapaths instantiated
+# per slot — Fig. 2b); XtraMAC shares ONE runtime-switching instance
+# (Table III) whose lanes serve both phases.
+#
+# scheme -> (vendor per-slot = quant IP + BF16 IP,
+#            xtramac switching instance, quant lanes, bf16 lanes)
+from repro.core.resource_model import TABLE_III
+
+_VENDOR_BF16 = TABLE_V["vendor"]["bf16"]                      # 220/310.5/1
+
+# vendor slot / (quant lanes, bf16 lanes) per slot:
+#  * FP-accumulate schemes: ONE upcast FP datapath (Table IV vendor row,
+#    conversion module included) serves both phases at 1 lane each.
+#  * W8A8 (INT32 accumulate): the FP operator cannot absorb INT8 — the
+#    vendor deploys spatial replication (2-lane INT8 MAC + BF16 MAC).
+_DEPLOY = {
+    "awq_int4": (TABLE_IV[("int8", "bf16")][0], (1, 1),
+                 TABLE_III["I:int4xbf16+bf16"], (2, 2)),
+    "w8a8": (TABLE_V["vendor"]["int8"].scale(2) + _VENDOR_BF16, (2, 1),
+             TABLE_III["II:int8xint8+int32|bf16"], (2, 2)),
+    "fp8": (TABLE_IV[("fp8_e4m3", "bf16")][0], (1, 1),
+            TABLE_III["III:fp8xfp8+bf16|bf16"], (4, 2)),
+    "mxfp4": (TABLE_IV[("fp4_e2m1", "bf16")][0], (1, 1),
+              TABLE_III["IV:fp4xbf16+bf16|bf16"], (2, 2)),
+}
+
+_SCHEME_WEIGHT_BITS = {"awq_int4": 4, "mxfp4": 4, "fp8": 8, "w8a8": 8,
+                       "bf16": 16}
+
+
+def _param_split(cfg: ModelConfig) -> Dict[str, float]:
+    """Active parameter counts by role: {'proj': N, 'head': N} per layer sum."""
+    from repro.launch.roofline import model_params
+    p = model_params(cfg)
+    # embedding + lm_head stream once per token too, in bf16
+    emb = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    return {"proj": p["active"] - emb, "emb": float(emb)}
+
+
+def mac_distribution(cfg: ModelConfig, scheme: str, context: int
+                     ) -> Dict[str, float]:
+    """Fig. 1: fraction of decode MACs per datatype combination."""
+    split = _param_split(cfg)
+    proj_macs = split["proj"] + split["emb"] * 0  # embeddings: lookup, no MAC
+    lm_head_macs = cfg.vocab * cfg.d_model
+    attn_macs = 2.0 * context * cfg.n_heads * cfg.head_dim * cfg.n_layers
+    total = proj_macs + lm_head_macs + attn_macs
+    combos = {
+        "awq_int4": "INT4xBF16", "mxfp4": "FP4xBF16",
+        "fp8": "FP8xFP8", "w8a8": "INT8xINT8", "bf16": "BF16xBF16",
+    }
+    quant_name = combos[scheme]
+    dist = {quant_name: proj_macs / total}
+    dist["BF16xBF16"] = dist.get("BF16xBF16", 0.0) + \
+        (attn_macs + lm_head_macs) / total
+    return dist
+
+
+def mac_unit_budget(per_op: Resources, fpga: FPGAProfile) -> int:
+    """How many MAC lanes the fabric budget supports."""
+    lut_lim = fpga.usable_fraction * fpga.luts / max(per_op.lut, 1e-9)
+    ff_lim = fpga.usable_fraction * fpga.ffs / max(per_op.ff, 1e-9)
+    dsp_lim = fpga.usable_fraction * fpga.dsps / max(per_op.dsp, 1e-9)
+    return int(min(lut_lim, ff_lim, dsp_lim))
+
+
+def decode_latency(cfg: ModelConfig, scheme: str, *, batch: int, context: int,
+                   design: str, fpga: FPGAProfile = V80) -> Dict[str, float]:
+    """One decode step latency under the two-phase streaming model."""
+    split = _param_split(cfg)
+    w_bits = _SCHEME_WEIGHT_BITS[scheme]
+    weight_bytes = split["proj"] * w_bits / 8.0 + split["emb"] * 2.0
+    # KV read for attention (bf16), grows with context
+    kv_bytes = 2.0 * 2 * context * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers
+    t_mem = (weight_bytes + batch * kv_bytes) / (fpga.hbm_gbps * 1e9)
+
+    vendor_slot, (vq, vb), xtra_inst, (xq, xb) = _DEPLOY[scheme]
+    if design == "vendor":
+        slots = mac_unit_budget(vendor_slot, fpga)
+        units_q, units_b = slots * vq, slots * vb
+    else:
+        slots = mac_unit_budget(xtra_inst, fpga)
+        units_q, units_b = slots * xq, slots * xb
+    proj_macs = split["proj"] + cfg.vocab * cfg.d_model
+    attn_macs = 2.0 * context * cfg.n_heads * cfg.head_dim * cfg.n_layers
+    freq = fpga.freq_mhz * 1e6
+    t_compute = batch * (proj_macs / (units_q * freq)
+                         + attn_macs / (units_b * freq))
+    return {"t_mem_s": t_mem, "t_compute_s": t_compute,
+            "t_total_s": max(t_mem, t_compute),
+            "bound": "memory" if t_mem >= t_compute else "compute",
+            "units_quant": units_q, "units_bf16": units_b}
+
+
+def fig14_simulation(context: int = 512, batches=(1, 8, 32),
+                     fpga: FPGAProfile = V80) -> Dict:
+    """Reproduce Fig. 14: per-checkpoint decode latency, vendor vs XtraMAC."""
+    from repro.configs.xtramac_paper import PAPER_CHECKPOINTS
+    rows = {}
+    for name, (cfg, scheme) in PAPER_CHECKPOINTS.items():
+        per_batch = {}
+        for b in batches:
+            v = decode_latency(cfg, scheme, batch=b, context=context,
+                               design="vendor", fpga=fpga)
+            x = decode_latency(cfg, scheme, batch=b, context=context,
+                               design="xtramac", fpga=fpga)
+            per_batch[b] = {
+                "vendor_ms": v["t_total_s"] * 1e3,
+                "xtramac_ms": x["t_total_s"] * 1e3,
+                "speedup": v["t_total_s"] / x["t_total_s"],
+                "bound": x["bound"],
+            }
+        rows[name] = per_batch
+    return rows

@@ -1,0 +1,7 @@
+"""Quantization substrate: schemes (Table I), sub-byte packing, calibration."""
+from .pack import codes_per_word, pack_codes, pack_codes_np, unpack_codes  # noqa: F401
+from .schemes import (  # noqa: F401
+    SCHEMES, QuantScheme, QuantizedLinearWeights, decode_codes, dequant_lut,
+    dequantize, get_scheme, quantize_activations_fp8,
+    quantize_activations_int8, quantize_weights,
+)

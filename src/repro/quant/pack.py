@@ -1,0 +1,53 @@
+"""Sub-byte code packing — the TPU analogue of the paper's DSP bit-space.
+
+On the U55c, XtraMAC packs multiple low-precision operands into each
+512-bit HBM channel word (Section VI-C).  On TPU the same insight applies
+to HBM words: INT4/FP4 codes are packed 8-per-int32 (FP8/INT8: 4-per-int32)
+along the reduction (K) dimension, so decode-GEMV streams 4x fewer bytes
+than BF16 weights.  Kernels unpack in VMEM right before the MXU.
+
+Layout: ``packed[k // per_word, n]`` holds codes ``k .. k+per_word-1`` of
+column ``n`` in little-endian bit order (code i at bits [i*bits, (i+1)*bits)).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def codes_per_word(bits: int) -> int:
+    assert 32 % bits == 0, f"bits={bits} must divide 32"
+    return 32 // bits
+
+
+def pack_codes(codes, bits: int):
+    """codes: uint values < 2^bits, shape [K, ...] -> int32 [K/per_word, ...]."""
+    per = codes_per_word(bits)
+    k = codes.shape[0]
+    assert k % per == 0, f"K={k} not divisible by {per}"
+    c = jnp.asarray(codes, jnp.int32).reshape((k // per, per) + codes.shape[1:])
+    word = jnp.zeros((k // per,) + codes.shape[1:], jnp.int32)
+    for i in range(per):
+        word = word | (c[:, i] << (i * bits))
+    return word
+
+
+def unpack_codes(words, bits: int):
+    """int32 [Kw, ...] -> uint codes [Kw*per_word, ...] (jnp; kernel-safe)."""
+    per = codes_per_word(bits)
+    mask = (1 << bits) - 1
+    parts = [(words >> (i * bits)) & mask for i in range(per)]
+    stacked = jnp.stack(parts, axis=1)  # [Kw, per, ...]
+    return stacked.reshape((words.shape[0] * per,) + words.shape[1:])
+
+
+def pack_codes_np(codes: np.ndarray, bits: int) -> np.ndarray:
+    """Numpy twin of ``pack_codes`` (used off-trace, e.g. checkpoint import)."""
+    per = codes_per_word(bits)
+    k = codes.shape[0]
+    assert k % per == 0
+    c = codes.astype(np.int64).reshape((k // per, per) + codes.shape[1:])
+    word = np.zeros((k // per,) + codes.shape[1:], np.int64)
+    for i in range(per):
+        word |= c[:, i] << (i * bits)
+    return word.astype(np.uint32).view(np.int32)  # values < 2^32: reinterpret

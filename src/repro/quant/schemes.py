@@ -1,0 +1,194 @@
+"""Quantization schemes for mixed-precision LLM inference (paper Table I).
+
+Each scheme describes one MAC datatype combination of the paper and how
+weights are quantized into it:
+
+  awq_int4   weight-only INT4 (group-wise, symmetric)  -> INT4 x BF16 + BF16
+  w8a8       SmoothQuant-style INT8 weights+acts       -> INT8 x INT8 + INT32
+  fp8        E4M3 weights+acts (per-channel scale)     -> FP8 x FP8 + BF16
+  mxfp4      MXFP4: FP4 E2M1 + UE8M0 power-of-2 scale  -> FP4 x BF16 + BF16
+  bf16       no quantization (attention MACs)          -> BF16 x BF16 + BF16
+
+The dequant LUTs are generated from core.formats codecs, so kernel-side
+decode is bit-identical to the XtraMAC Stage-1 mapping semantics (DAZ,
+implicit-one restore).  quantize() lives in numpy (offline, checkpoint
+prep); dequantize() has a jnp path used inside models and kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from .pack import codes_per_word, pack_codes_np, unpack_codes
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantScheme:
+    name: str
+    weight_format: str         # core.formats name
+    act_format: str            # 'bf16' | 'int8' | 'fp8_e4m3'
+    acc_format: str            # 'bf16' | 'fp32' | 'int32'
+    group_size: int            # scale granularity along K; -1 = per-channel
+    weight_bits: int
+    scale_pow2: bool = False   # UE8M0-style power-of-two scales (MXFP4)
+    pack_in_words: bool = True  # sub-byte/byte codes packed into int32 words
+
+    @property
+    def packed(self) -> bool:
+        return self.pack_in_words and self.weight_bits <= 8
+
+    @property
+    def mac_combo(self) -> str:
+        """The XtraMAC datatype combination this scheme executes as."""
+        return f"{self.weight_format}x{self.act_format}"
+
+
+SCHEMES: Dict[str, QuantScheme] = {
+    "awq_int4": QuantScheme("awq_int4", "int4", "bf16", "bf16", 128, 4),
+    # w8a8 keeps raw int8 [K, N] so the MXU INT8 x INT8 -> INT32 path applies
+    "w8a8": QuantScheme("w8a8", "int8", "int8", "int32", -1, 8, pack_in_words=False),
+    "fp8": QuantScheme("fp8", "fp8_e4m3", "fp8_e4m3", "bf16", -1, 8),
+    "mxfp4": QuantScheme("mxfp4", "fp4_e2m1", "bf16", "bf16", 32, 4, scale_pow2=True),
+    "bf16": QuantScheme("bf16", "bf16", "bf16", "bf16", -1, 16, pack_in_words=False),
+}
+
+
+def get_scheme(name: str) -> QuantScheme:
+    return SCHEMES[name]
+
+
+@dataclasses.dataclass
+class QuantizedLinearWeights:
+    """Packed weights + scales for one linear layer (K in-features x N out)."""
+    scheme: QuantScheme
+    packed: np.ndarray | jnp.ndarray     # int32 [K/per_word, N] (or bf16 [K,N])
+    scales: Optional[np.ndarray | jnp.ndarray]  # f32 [K/G, N] or [1, N] or None
+    shape: Tuple[int, int]               # (K, N) logical
+
+
+# ---------------------------------------------------------------------------
+# Dequant lookup tables (exact codec values, from core.formats)
+# ---------------------------------------------------------------------------
+def dequant_lut(fmt_name: str) -> np.ndarray:
+    """code -> float32 value table for a <=8-bit float format (DAZ applied)."""
+    fmt = F.get_format(fmt_name)
+    assert fmt.bits <= 8
+    vals = fmt.decode_to_f64(np.arange(1 << fmt.bits))
+    return np.nan_to_num(vals, nan=0.0).astype(np.float32)
+
+
+FP4_LUT = dequant_lut("fp4_e2m1")
+FP8_LUT = dequant_lut("fp8_e4m3")
+
+
+def _int_decode(codes, bits: int):
+    """Unsigned codes -> signed two's-complement values (jnp)."""
+    half = 1 << (bits - 1)
+    return jnp.where(codes >= half, codes - (1 << bits), codes)
+
+
+def decode_codes(scheme: QuantScheme, codes):
+    """jnp: unsigned codes -> float32 format values (pre-scale)."""
+    if scheme.weight_format.startswith("int"):
+        return _int_decode(codes, scheme.weight_bits).astype(jnp.float32)
+    if scheme.weight_format == "fp4_e2m1":
+        return jnp.asarray(FP4_LUT)[codes]
+    if scheme.weight_format == "fp8_e4m3":
+        return jnp.asarray(FP8_LUT)[codes]
+    raise ValueError(scheme.weight_format)
+
+
+# ---------------------------------------------------------------------------
+# Quantize (offline / checkpoint preparation; numpy)
+# ---------------------------------------------------------------------------
+def effective_group(group: int, k: int) -> int:
+    """Group size along K (clamped: small test layers use one group)."""
+    return k if (group == -1 or group > k) else group
+
+
+def _group_absmax(w: np.ndarray, group: int) -> np.ndarray:
+    k, n = w.shape
+    g = effective_group(group, k)
+    assert k % g == 0
+    return np.abs(w.reshape(k // g, g, n)).max(axis=1)  # [K/G, N]
+
+
+def quantize_weights(scheme: QuantScheme, w: np.ndarray) -> QuantizedLinearWeights:
+    """Quantize a float weight matrix [K, N] into packed codes + scales."""
+    w = np.asarray(w, np.float32)
+    k, n = w.shape
+    if scheme.name == "bf16":
+        return QuantizedLinearWeights(scheme, jnp.asarray(w, jnp.bfloat16), None, (k, n))
+
+    g = effective_group(scheme.group_size, k)
+    absmax = np.maximum(_group_absmax(w, g), 1e-12)          # [K/G, N]
+
+    if scheme.weight_format.startswith("int"):
+        qmax = (1 << (scheme.weight_bits - 1)) - 1           # symmetric
+        scales = absmax / qmax
+        wg = w.reshape(k // g, g, n)
+        q = np.rint(wg / scales[:, None, :]).clip(-qmax - 1, qmax)
+        codes = (q.astype(np.int64) & ((1 << scheme.weight_bits) - 1)).reshape(k, n)
+    else:
+        fmt = F.get_format(scheme.weight_format)
+        if scheme.scale_pow2:  # UE8M0: scale = 2^ceil(log2(absmax / max_finite))
+            scales = np.exp2(np.ceil(np.log2(absmax / fmt.max_finite)))
+        else:
+            scales = absmax / fmt.max_finite
+        wg = w.reshape(k // g, g, n) / scales[:, None, :]
+        codes = F.quantize_f64(fmt, wg.astype(np.float64)).reshape(k, n)
+
+    if scheme.packed:
+        packed = pack_codes_np(codes.astype(np.int64), scheme.weight_bits)
+    else:
+        packed = codes.astype(np.int8) if scheme.weight_format.startswith("int") \
+            else codes.astype(np.uint8)
+    return QuantizedLinearWeights(
+        scheme, jnp.asarray(packed), jnp.asarray(scales, jnp.float32), (k, n)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Dequantize (jnp; reference path — kernels fuse this into the matmul)
+# ---------------------------------------------------------------------------
+def dequantize(qw: QuantizedLinearWeights, dtype=jnp.bfloat16):
+    """Packed codes + scales -> dense weights [K, N].
+
+    dtype=bf16 is the 'upcast' baseline materialization; dtype=f32 matches
+    the fused kernels (which never round the dequantized value).
+    """
+    scheme = qw.scheme
+    if scheme.name == "bf16":
+        return qw.packed.astype(dtype)
+    k, n = qw.shape
+    if scheme.packed:
+        codes = unpack_codes(qw.packed, scheme.weight_bits)     # [K, N] uint
+    else:
+        codes = qw.packed.astype(jnp.int32) & ((1 << scheme.weight_bits) - 1)
+    vals = decode_codes(scheme, codes)                          # f32 [K, N]
+    g = effective_group(scheme.group_size, k)
+    vals = vals.reshape(k // g, g, n) * qw.scales[:, None, :]
+    return vals.reshape(k, n).astype(dtype)
+
+
+def quantize_activations_int8(x):
+    """Per-tensor symmetric INT8 activation quant (SmoothQuant-style); jnp."""
+    absmax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12)
+    scale = absmax / 127.0
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -128, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def quantize_activations_fp8(x):
+    """Per-tensor E4M3 activation quant; returns codes (uint8) + scale; jnp."""
+    fmt = F.FP8_E4M3
+    absmax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12)
+    scale = absmax / fmt.max_finite
+    scaled = x.astype(jnp.float32) / scale
+    # jnp-native E4M3 cast (XLA float8 support), then reinterpret as codes
+    codes = scaled.astype(jnp.float8_e4m3fn)
+    return codes, scale

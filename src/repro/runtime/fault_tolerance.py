@@ -1,0 +1,121 @@
+"""Fault-tolerance runtime: preemption handling, straggler detection,
+restart/elastic-resume orchestration.
+
+At thousands of nodes the failure model is: (a) planned preemptions
+(SIGTERM with a grace window), (b) hard node loss (job restarts from the
+latest checkpoint, possibly on a different topology), (c) stragglers
+(slow-but-alive hosts degrading every synchronous step).
+
+  * ``PreemptionHandler`` — installs SIGTERM/SIGINT hooks; the train loop
+    polls ``should_stop`` at step boundaries and checkpoints before exit.
+  * ``StragglerMonitor``  — per-step wall-clock EWMA + variance; flags
+    steps beyond ``sigma`` deviations and keeps a counter the deployment
+    layer can use to evict/re-schedule a host.
+  * ``RestartManager``    — "run until done" wrapper: on simulated/real
+    failures it resumes from the latest checkpoint; combined with the
+    elastic loader in checkpoint/store.py this also covers mesh-shape
+    changes across restarts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, List, Optional
+
+
+class PreemptionHandler:
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self._stop = False
+        self._prev = {}
+        for s in signals:
+            self._prev[s] = signal.signal(s, self._handler)
+
+    def _handler(self, signum, frame):
+        self._stop = True
+
+    @property
+    def should_stop(self) -> bool:
+        return self._stop
+
+    def request_stop(self):      # tests / manual drain
+        self._stop = True
+
+    def restore(self):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration_s: float
+    mean_s: float
+    deviations: float
+
+
+class StragglerMonitor:
+    """EWMA of step time; flags > ``sigma``-deviation steps."""
+
+    def __init__(self, alpha: float = 0.1, sigma: float = 3.0,
+                 warmup_steps: int = 5):
+        self.alpha = alpha
+        self.sigma = sigma
+        self.warmup = warmup_steps
+        self.mean: Optional[float] = None
+        self.var: float = 0.0
+        self.n = 0
+        self.events: List[StragglerEvent] = []
+        self._t0: Optional[float] = None
+
+    def start_step(self):
+        self._t0 = time.monotonic()
+
+    def end_step(self, step: int) -> Optional[StragglerEvent]:
+        assert self._t0 is not None
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        self.n += 1
+        if self.mean is None:
+            self.mean = dt
+            return None
+        dev = dt - self.mean
+        std = max(self.var, 1e-12) ** 0.5
+        flagged = None
+        if self.n > self.warmup and dev > self.sigma * std and std > 0:
+            flagged = StragglerEvent(step, dt, self.mean, dev / std)
+            self.events.append(flagged)
+        # EWMA update (flagged steps still update slowly so a persistent
+        # slowdown re-baselines instead of flagging forever)
+        a = self.alpha if flagged is None else self.alpha / 4
+        self.mean += a * dev
+        self.var = (1 - a) * (self.var + a * dev * dev)
+        return flagged
+
+    @property
+    def straggler_fraction(self) -> float:
+        return len(self.events) / max(self.n, 1)
+
+
+class RestartManager:
+    """Run a resumable body until completion, restarting on failure.
+
+    ``body(resume_step) -> finished_step`` raises on (simulated) failure;
+    the manager retries from the latest checkpoint up to ``max_restarts``.
+    """
+
+    def __init__(self, latest_step_fn: Callable[[], Optional[int]],
+                 max_restarts: int = 10):
+        self.latest_step_fn = latest_step_fn
+        self.max_restarts = max_restarts
+        self.restarts = 0
+
+    def run(self, body: Callable[[Optional[int]], int]) -> int:
+        while True:
+            resume = self.latest_step_fn()
+            try:
+                return body(resume)
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise

@@ -1,0 +1,113 @@
+"""Mixed-precision serving engine: batched prefill + decode with KV cache.
+
+This is the system-level consumer of the paper's technique: checkpoint
+weights are stored in the per-layer mixed-precision plan (projections /
+experts in INT4/FP8/FP4/INT8 packed codes -> the XtraMAC-style MACs;
+attention in BF16), and the engine runs one jitted prefill and one jitted
+decode step over a persistent cache — the per-tile "datatype control
+signal" of the paper's GEMV engine becomes the static per-layer scheme in
+the compiled program (DESIGN.md §2: JAX traces static dtypes, so runtime
+switching is realized at layer granularity, which is the granularity the
+paper's own workloads switch at).
+
+Greedy sampling by default; temperature optional.  Designed so the same
+class drives the CPU smoke tests and (via pjit shardings from
+launch/steps.py) the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0
+    eos_id: int = -1          # -1: never stop early
+    kv_dtype: jnp.dtype = jnp.bfloat16
+
+
+class ServingEngine:
+    def __init__(self, cfg: T.ModelConfig, params, serve_cfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg
+
+        mcfg = cfg
+
+        @jax.jit
+        def prefill(params, batch, cache):
+            logits, _, cache = T.forward(mcfg, params, batch, cache=cache,
+                                         cache_index=0, mode="prefill")
+            return logits[:, -1], cache
+
+        @jax.jit
+        def decode(params, tokens, cache, index):
+            logits, _, cache = T.forward(mcfg, params, {"tokens": tokens},
+                                         cache=cache, cache_index=index,
+                                         mode="decode")
+            return logits[:, -1], cache
+
+        self._prefill = prefill
+        self._decode = decode
+
+    def _sample(self, logits, key):
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature).astype(jnp.int32)
+
+    def generate(self, batch: Dict, *, max_new_tokens: int,
+                 seed: int = 0) -> Dict:
+        """batch: {'tokens': [B, S]} (+ stubs).  Returns generated ids and
+        per-step logits summaries."""
+        cfg, scfg = self.cfg, self.scfg
+        tokens = jnp.asarray(batch["tokens"], jnp.int32)
+        b, s = tokens.shape
+        prefix = cfg.n_patches if cfg.family == "vlm" else 0
+        max_len = prefix + s + max_new_tokens
+        assert max_len <= scfg.max_len + prefix + s, "grow ServeConfig.max_len"
+
+        cache = T.init_cache(cfg, b, prefix + s + max_new_tokens,
+                             kv_dtype=scfg.kv_dtype)
+        last_logits, cache = self._prefill(self.params, batch, cache)
+
+        key = jax.random.PRNGKey(seed)
+        out: List[np.ndarray] = []
+        index = prefix + s
+        tok = self._sample(last_logits, key)
+        out.append(np.asarray(tok))
+        finished = np.zeros((b,), bool)
+        for i in range(max_new_tokens - 1):
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, tok[:, None], cache,
+                                         jnp.int32(index + i))
+            tok = self._sample(logits, sub)
+            out.append(np.asarray(tok))
+            if scfg.eos_id >= 0:
+                finished |= np.asarray(tok) == scfg.eos_id
+                if finished.all():
+                    break
+        gen = np.stack(out, axis=1)
+        return {"generated": gen, "prompt_len": s, "batch": b}
+
+    def score(self, batch: Dict) -> np.ndarray:
+        """Teacher-forced mean NLL per row (serving-quality check)."""
+        logits, _, _ = T.forward(self.cfg, self.params, batch, mode="train")
+        if self.cfg.family == "vlm":
+            logits = logits[:, self.cfg.n_patches:]
+        lf = jnp.asarray(logits, jnp.float32)
+        labels = batch["labels"]
+        lse = jax.scipy.special.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, labels[..., None].clip(0), -1)[..., 0]
+        mask = (labels >= 0)
+        nll = jnp.where(mask, lse - gold, 0.0).sum(-1) / mask.sum(-1)
+        return np.asarray(nll)

@@ -1,0 +1,165 @@
+"""Bit-exactness of the vectorized XtraMAC datapath vs the exact oracle.
+
+Coverage strategy (paper Fig. 6 configurations):
+  * FP4 x BF16 + BF16  -> BF16   : exhaustive over A, dense-sampled B, C
+  * FP8 x FP8 + BF16   -> BF16   : exhaustive over (A, B), sampled C
+  * INT4 x BF16 + BF16 -> BF16   : exhaustive over A, sampled B, C
+  * INT8 x INT8 + INT32-> INT32  : exhaustive over (A, B), sampled C
+  * BF16 x BF16 + BF16 -> BF16   : randomized (incl. specials)
+  * FP16 / FP32-accumulate variants: randomized
+plus directed special-value cases (NaN, inf, inf*0, inf-inf, FTZ/DAZ).
+"""
+import numpy as np
+import pytest
+
+from repro.core import formats as F
+from repro.core.mac import MacConfig, xtramac, xtramac_switching
+from repro.core.ref_mac import mac_exact_vec
+
+RNG = np.random.default_rng(0)
+
+
+def _assert_bitexact(cfg: MacConfig, a, b, c, n_show=5):
+    got = xtramac(cfg, a, b, c)
+    want = mac_exact_vec(cfg.fmt_a, cfg.fmt_b, cfg.fmt_c, cfg.fmt_p, a, b, c)
+    bad = got != want
+    if bad.any():
+        idx = np.argwhere(bad)[:n_show]
+        msg = [f"{cfg.name}: {int(bad.sum())}/{bad.size} mismatches"]
+        for i in idx:
+            i = tuple(i)
+            msg.append(
+                f"  a={a[i]:#x} b={b[i]:#x} c={c[i]:#x} got={got[i]:#x} want={want[i]:#x}"
+            )
+        raise AssertionError("\n".join(msg))
+
+
+def _rand_bits(fmt, n):
+    return RNG.integers(0, 1 << fmt.bits, size=n, dtype=np.int64)
+
+
+def test_fp4_bf16_exhaustive_a():
+    cfg = MacConfig.make("fp4_e2m1", "bf16", "bf16", "bf16")
+    a = np.arange(16, dtype=np.int64)
+    b = _rand_bits(F.BF16, 4096)
+    c = _rand_bits(F.BF16, 4096)
+    A, B = np.meshgrid(a, b, indexing="ij")
+    C = np.broadcast_to(c, A.shape)
+    _assert_bitexact(cfg, A.ravel(), B.ravel(), C.ravel())
+
+
+def test_fp8_fp8_exhaustive_ab():
+    cfg = MacConfig.make("fp8_e4m3", "fp8_e4m3", "bf16", "bf16")
+    a = np.arange(256, dtype=np.int64)
+    b = np.arange(256, dtype=np.int64)
+    A, B = np.meshgrid(a, b, indexing="ij")
+    C = _rand_bits(F.BF16, A.size).reshape(A.shape)
+    _assert_bitexact(cfg, A.ravel(), B.ravel(), C.ravel())
+
+
+def test_fp8_e5m2_randomized():
+    cfg = MacConfig.make("fp8_e5m2", "fp8_e5m2", "fp16", "fp16")
+    n = 50_000
+    _assert_bitexact(cfg, _rand_bits(F.FP8_E5M2, n), _rand_bits(F.FP8_E5M2, n), _rand_bits(F.FP16, n))
+
+
+def test_int4_bf16_exhaustive_a():
+    cfg = MacConfig.make("int4", "bf16", "bf16", "bf16")
+    a = np.arange(16, dtype=np.int64)
+    b = _rand_bits(F.BF16, 4096)
+    c = _rand_bits(F.BF16, 4096)
+    A, B = np.meshgrid(a, b, indexing="ij")
+    C = np.broadcast_to(c, A.shape)
+    _assert_bitexact(cfg, A.ravel(), B.ravel(), C.ravel())
+
+
+def test_int8_int8_int32_exhaustive_ab():
+    cfg = MacConfig.make("int8", "int8", "int32", "int32")
+    a = np.arange(256, dtype=np.int64)
+    b = np.arange(256, dtype=np.int64)
+    A, B = np.meshgrid(a, b, indexing="ij")
+    C = _rand_bits(F.INT32, A.size).reshape(A.shape)
+    _assert_bitexact(cfg, A.ravel(), B.ravel(), C.ravel())
+
+
+def test_int32_saturation():
+    cfg = MacConfig.make("int8", "int8", "int32", "int32")
+    # (-128)*(-128) repeatedly added near int32 max must saturate, not wrap
+    a = np.full(4, 0x80, dtype=np.int64)   # -128
+    b = np.full(4, 0x80, dtype=np.int64)
+    c = np.array([0x7FFFFFFF, 0x7FFF0000, 0x80000000, 0], dtype=np.int64)
+    _assert_bitexact(cfg, a, b, c)
+
+
+def test_bf16_bf16_randomized():
+    cfg = MacConfig.make("bf16", "bf16", "bf16", "bf16")
+    n = 200_000
+    _assert_bitexact(cfg, _rand_bits(F.BF16, n), _rand_bits(F.BF16, n), _rand_bits(F.BF16, n))
+
+
+def test_fp16_fp16_randomized():
+    cfg = MacConfig.make("fp16", "fp16", "fp16", "fp16")
+    n = 200_000
+    _assert_bitexact(cfg, _rand_bits(F.FP16, n), _rand_bits(F.FP16, n), _rand_bits(F.FP16, n))
+
+
+def test_fp32_accumulator_randomized():
+    cfg = MacConfig.make("bf16", "bf16", "fp32", "fp32")
+    n = 100_000
+    _assert_bitexact(cfg, _rand_bits(F.BF16, n), _rand_bits(F.BF16, n), _rand_bits(F.FP32, n))
+
+
+@pytest.mark.parametrize("combo", [
+    ("int2", "bf16", "bf16", "bf16"),
+    ("int3", "bf16", "bf16", "bf16"),
+    ("int5", "fp16", "fp16", "fp16"),
+    ("int6", "bf16", "bf16", "bf16"),
+    ("int7", "fp16", "fp16", "fp16"),
+    ("int8", "bf16", "bf16", "bf16"),
+    ("fp4_e2m1", "fp4_e2m1", "bf16", "bf16"),
+    ("fp8_e4m3", "bf16", "bf16", "bf16"),
+    ("fp8_e4m3", "fp16", "fp16", "fp16"),
+])
+def test_mixed_combos_randomized(combo):
+    cfg = MacConfig.make(*combo)
+    n = 30_000
+    _assert_bitexact(
+        cfg, _rand_bits(cfg.fmt_a, n), _rand_bits(cfg.fmt_b, n), _rand_bits(cfg.fmt_c, n)
+    )
+
+
+def test_special_values_directed():
+    cfg = MacConfig.make("bf16", "bf16", "bf16", "bf16")
+    bf = F.BF16
+    qnan, pinf, ninf = bf.qnan_bits, bf.inf_bits(0), bf.inf_bits(1)
+    one = 0x3F80  # 1.0 in bf16
+    sub = 0x0001  # subnormal -> DAZ zero
+    cases = [
+        (qnan, one, one), (one, qnan, one), (one, one, qnan),       # NaN prop
+        (pinf, 0, one),                                              # inf * 0
+        (pinf, one, ninf), (ninf, one, pinf),                        # inf - inf
+        (pinf, one, one), (one, one, pinf), (ninf, one, one),        # inf prop
+        (sub, one, one), (one, sub, one), (one, one, sub),           # DAZ
+        (0x0080, 0x0080, 0),                                         # FTZ underflow
+        (bf.max_finite_bits(0), bf.max_finite_bits(0), 0),           # overflow sat
+        (one, one, one | 0x8000),                                    # 1*1 + (-1) = +0
+    ]
+    a, b, c = (np.array(x, dtype=np.int64) for x in zip(*cases))
+    _assert_bitexact(cfg, a, b, c)
+
+
+def test_runtime_switching_mux():
+    """Per-element datatype switching == running each config separately."""
+    cfgs = [
+        MacConfig.make("int4", "bf16", "bf16", "bf16"),
+        MacConfig.make("bf16", "bf16", "bf16", "bf16"),
+    ]
+    n = 10_000
+    a = _rand_bits(F.BF16, n)
+    b = _rand_bits(F.BF16, n)
+    c = _rand_bits(F.BF16, n)
+    sel = RNG.integers(0, 2, size=n)
+    out = xtramac_switching(cfgs, sel, a, b, c)
+    for i, cfg in enumerate(cfgs):
+        ref = mac_exact_vec(cfg.fmt_a, cfg.fmt_b, cfg.fmt_c, cfg.fmt_p, a, b, c)
+        np.testing.assert_array_equal(out[sel == i], ref[sel == i])

@@ -1,0 +1,151 @@
+"""Lane-packing (Eq. 9-12) and pipeline (Section IV) behaviour tests."""
+import numpy as np
+import pytest
+
+from repro.core import formats as F
+from repro.core.mac import MacConfig
+from repro.core.packing import (
+    PAPER_PARALLELISM, SOLVER_BEYOND_PAPER, packed_multiply,
+    per_lane_reference, solve_lane_plan, utilization_upcast,
+    utilization_xtramac, xtramac_packed,
+)
+from repro.core.pipeline import Op, XtraMACPipeline
+
+RNG = np.random.default_rng(1)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 12 / Fig. 6: solver reaches the paper's parallelism for every datatype
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pair,expect", sorted(PAPER_PARALLELISM.items()))
+def test_paper_parallelism_feasible(pair, expect):
+    """The paper's deployed lane count is realizable at its own cap..."""
+    plan = solve_lane_plan(*pair, max_parallelism=expect)
+    plan.validate()
+    assert plan.parallelism == expect, (pair, plan)
+
+
+@pytest.mark.parametrize("pair,expect", sorted(PAPER_PARALLELISM.items()))
+def test_solver_meets_or_beats_paper(pair, expect):
+    """...and the uncapped solver never does worse than the paper."""
+    plan = solve_lane_plan(*pair)
+    plan.validate()
+    assert plan.parallelism >= expect, (pair, plan)
+
+
+@pytest.mark.parametrize("pair,expect", sorted(SOLVER_BEYOND_PAPER.items()))
+def test_solver_beats_paper_cap(pair, expect):
+    """Beyond-paper: e.g. FP4xFP4 admits 6 isolated lanes (paper: 4)."""
+    plan = solve_lane_plan(*pair)
+    plan.validate()
+    assert plan.parallelism >= expect, (pair, plan)
+
+
+def test_lane_isolation_exhaustive_fp8():
+    """Every packed product equals the standalone product — Eq. 10/11."""
+    plan = solve_lane_plan("fp8_e4m3", "fp8_e4m3", max_parallelism=4)
+    n_a, n_b = len(plan.offsets_a), len(plan.offsets_b)
+    # exhaustive over mantissa magnitudes (4-bit each incl implicit bit)
+    mags = np.arange(16)
+    grids = np.meshgrid(*([mags] * (n_a + n_b)), indexing="ij")
+    a = np.stack(grids[:n_a], axis=-1).reshape(-1, n_a)
+    b = np.stack(grids[n_a:], axis=-1).reshape(-1, n_b)
+    prods = packed_multiply(plan, a, b)
+    for lane, (i, j, _) in enumerate(plan.lane_positions):
+        np.testing.assert_array_equal(prods[..., lane], a[:, i] * b[:, j])
+
+
+@pytest.mark.parametrize("pair", [("bf16", "bf16"), ("int8", "int8"),
+                                  ("int4", "bf16"), ("fp4_e2m1", "bf16")])
+def test_lane_isolation_randomized(pair):
+    plan = solve_lane_plan(*pair, max_parallelism=4)
+    n_a, n_b = len(plan.offsets_a), len(plan.offsets_b)
+    a = RNG.integers(0, 1 << plan.w_a, size=(20_000, n_a), dtype=np.int64)
+    b = RNG.integers(0, 1 << plan.w_b, size=(20_000, n_b), dtype=np.int64)
+    prods = packed_multiply(plan, a, b)
+    for lane, (i, j, _) in enumerate(plan.lane_positions):
+        np.testing.assert_array_equal(prods[..., lane], a[:, i] * b[:, j])
+
+
+@pytest.mark.parametrize("combo", [
+    ("int4", "bf16", "bf16", "bf16"),
+    ("fp8_e4m3", "fp8_e4m3", "bf16", "bf16"),
+    ("bf16", "bf16", "bf16", "bf16"),
+    ("int8", "int8", "int32", "int32"),
+    ("fp4_e2m1", "bf16", "bf16", "bf16"),
+])
+def test_packed_mac_equals_per_lane(combo):
+    """Full packed MAC through ONE multiply == per-lane xtramac, bit-exact."""
+    cfg = MacConfig.make(*combo)
+    plan = solve_lane_plan(cfg.fmt_a, cfg.fmt_b, max_parallelism=4)
+    n = 5_000
+    a = RNG.integers(0, 1 << cfg.fmt_a.bits, size=(n, len(plan.offsets_a)), dtype=np.int64)
+    b = RNG.integers(0, 1 << cfg.fmt_b.bits, size=(n, len(plan.offsets_b)), dtype=np.int64)
+    c = RNG.integers(0, 1 << min(cfg.fmt_c.bits, 32), size=(n, plan.parallelism), dtype=np.int64)
+    got = xtramac_packed(cfg, plan, a, b, c)
+    want = per_lane_reference(cfg, plan, a, b, c)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# DSP utilization model (Fig. 3 / Fig. 9)
+# ---------------------------------------------------------------------------
+def test_utilization_ordering():
+    # packed XtraMAC beats upcasting for every low-precision combo
+    for pair in [("int4", "bf16"), ("fp8_e4m3", "fp8_e4m3"), ("fp4_e2m1", "bf16")]:
+        assert utilization_xtramac(*pair) > utilization_upcast(*pair)
+    # FP8xFP8 packed: 4 lanes x (4+4) operand bits = 32/45 ≈ 71.1%
+    assert utilization_xtramac("fp8_e4m3", "fp8_e4m3") == pytest.approx(32 / 45)
+    # INT8 2-lane packing reproduces TATAA's own 71.1% INT8 figure
+    assert utilization_xtramac("int8", "int8") == pytest.approx(0.711, abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline: latency 4, II=1, cycle-level runtime datatype switching
+# ---------------------------------------------------------------------------
+def _random_op(cfgs, plans, sel):
+    cfg, plan = cfgs[sel], plans[sel]
+    a = RNG.integers(0, 1 << cfg.fmt_a.bits, size=len(plan.offsets_a), dtype=np.int64)
+    b = RNG.integers(0, 1 << cfg.fmt_b.bits, size=len(plan.offsets_b), dtype=np.int64)
+    c = RNG.integers(0, 1 << min(cfg.fmt_c.bits, 32), size=plan.parallelism, dtype=np.int64)
+    return Op(sel, a, b, c)
+
+
+def test_pipeline_latency_and_ii():
+    cfgs = [MacConfig.make("int4", "bf16", "bf16", "bf16"),
+            MacConfig.make("bf16", "bf16", "bf16", "bf16")]
+    pipe = XtraMACPipeline(cfgs)
+    assert pipe.latency == 4
+    op = _random_op(cfgs, pipe.plans, 0)
+    outs = [pipe.step(op)] + [pipe.step(None) for _ in range(4)]
+    # result appears exactly 4 cycles after issue, never earlier
+    assert all(o is None for o in outs[:4]) and outs[4] is not None
+
+
+def test_pipeline_cycle_level_switching():
+    """Alternate datatypes EVERY cycle; stream stays II=1 and bit-exact."""
+    cfgs = [MacConfig.make("int8", "int8", "int32", "int32"),
+            MacConfig.make("bf16", "bf16", "bf16", "bf16"),
+            MacConfig.make("fp8_e4m3", "fp8_e4m3", "bf16", "bf16")]
+    pipe = XtraMACPipeline(cfgs)
+    ops = [_random_op(cfgs, pipe.plans, i % 3) for i in range(60)]
+    results = pipe.run(ops)
+    assert len(results) == len(ops)  # II = 1: one result per issued cycle
+    for op, got in zip(ops, results):
+        cfg, plan = cfgs[op.dtype_sel], pipe.plans[op.dtype_sel]
+        want = per_lane_reference(cfg, plan, op.a_bits[None], op.b_bits[None], op.c_bits[None])[0]
+        np.testing.assert_array_equal(got, want)
+
+
+def test_pipeline_configurable_stage_latency():
+    """Extra Stage-3 registers raise latency but keep II=1 (Section IV-F)."""
+    cfgs = [MacConfig.make("bf16", "bf16", "bf16", "bf16")]
+    pipe = XtraMACPipeline(cfgs, stage_cycles=(1, 1, 3, 1))
+    assert pipe.latency == 6
+    ops = [_random_op(cfgs, pipe.plans, 0) for _ in range(20)]
+    results = pipe.run(ops)
+    assert len(results) == len(ops)
+    for op, got in zip(ops, results):
+        want = per_lane_reference(cfgs[0], pipe.plans[0], op.a_bits[None],
+                                  op.b_bits[None], op.c_bits[None])[0]
+        np.testing.assert_array_equal(got, want)

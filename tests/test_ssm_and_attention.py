@@ -1,0 +1,129 @@
+"""Equivalence tests: chunked vs naive SSD, attention paths, decode steps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm as S
+from repro.models import attention as A
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+@pytest.mark.parametrize("normalize", [False, True])
+def test_ssd_chunked_matches_naive(normalize):
+    b, s, nh, dk, dv = 2, 64, 3, 8, 5
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q, k = _rand(ks[0], (b, s, nh, dk)), _rand(ks[1], (b, s, nh, dk))
+    v = _rand(ks[2], (b, s, nh, dv))
+    lf = -jax.nn.softplus(_rand(ks[3], (b, s, nh)))          # log decay <= 0
+    li = _rand(ks[4], (b, s, nh), 0.5)                        # log gain
+    y_naive, st_naive = S.ssd_naive(q, k, v, lf, li, normalize=normalize)
+    y_chunk, st_chunk = S.ssd_chunked(q, k, v, lf, li, chunk=16,
+                                      normalize=normalize)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                               rtol=2e-4, atol=2e-4)
+    # unscaled state must agree: H_true = Hs * exp(m)
+    h_naive = np.asarray(st_naive.Hs) * np.exp(np.asarray(st_naive.m))[..., None, None]
+    h_chunk = np.asarray(st_chunk.Hs) * np.exp(np.asarray(st_chunk.m))[..., None, None]
+    np.testing.assert_allclose(h_chunk, h_naive, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("normalize", [False, True])
+def test_ssd_step_continues_chunked(normalize):
+    """decode steps after a chunked prefix == one long parallel pass."""
+    b, s, nh, dk, dv = 1, 48, 2, 6, 4
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    q, k = _rand(ks[0], (b, s, nh, dk)), _rand(ks[1], (b, s, nh, dk))
+    v = _rand(ks[2], (b, s, nh, dv))
+    lf = -jax.nn.softplus(_rand(ks[3], (b, s, nh)))
+    li = _rand(ks[4], (b, s, nh), 0.5)
+    y_full, _ = S.ssd_naive(q, k, v, lf, li, normalize=normalize)
+
+    cut = 32
+    _, st = S.ssd_chunked(q[:, :cut], k[:, :cut], v[:, :cut],
+                          lf[:, :cut], li[:, :cut], chunk=16,
+                          normalize=normalize)
+    ys = []
+    for t in range(cut, s):
+        y, st = S.ssd_step(st, q[:, t], k[:, t], v[:, t], lf[:, t], li[:, t],
+                           normalize=normalize)
+        ys.append(y)
+    got = np.stack([np.asarray(y) for y in ys], axis=1)
+    np.testing.assert_allclose(got, np.asarray(y_full[:, cut:]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_attention_chunked_matches_dense():
+    b, s, h, hk, dh = 2, 128, 8, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(ks[0], (b, s, h, dh)).astype(jnp.bfloat16)
+    k = _rand(ks[1], (b, s, hk, dh)).astype(jnp.bfloat16)
+    v = _rand(ks[2], (b, s, hk, dh)).astype(jnp.bfloat16)
+    dense = A.attend(q, k, v, causal=True, kv_chunk=4096)   # dense path
+    chunk = A.attend(q, k, v, causal=True, kv_chunk=32)     # 4-chunk scan
+    np.testing.assert_allclose(np.asarray(chunk, np.float32),
+                               np.asarray(dense, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_attention_decode_matches_full():
+    """single-query decode over a prefilled cache == row s-1 of full attn."""
+    b, s, h, hk, dh = 2, 33, 4, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(ks[0], (b, s, h, dh)).astype(jnp.bfloat16)
+    k = _rand(ks[1], (b, s, hk, dh)).astype(jnp.bfloat16)
+    v = _rand(ks[2], (b, s, hk, dh)).astype(jnp.bfloat16)
+    full = A.attend(q, k, v, causal=True, kv_chunk=4096)
+    dec = A.attend(q[:, -1:], k, v, causal=True, q_offset=s - 1,
+                   kv_valid_len=jnp.full((b,), s, jnp.int32), kv_chunk=4096)
+    np.testing.assert_allclose(np.asarray(dec[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_causal_mask_blocks_future():
+    """perturbing future tokens must not change past outputs."""
+    b, s, h, dh = 1, 16, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = _rand(ks[0], (b, s, h, dh)).astype(jnp.bfloat16)
+    k = _rand(ks[1], (b, s, h, dh)).astype(jnp.bfloat16)
+    v = _rand(ks[2], (b, s, h, dh)).astype(jnp.bfloat16)
+    out1 = A.attend(q, k, v, causal=True, kv_chunk=8)
+    k2 = k.at[:, 10:].set(9.0)
+    v2 = v.at[:, 10:].set(-9.0)
+    out2 = A.attend(q, k2, v2, causal=True, kv_chunk=8)
+    np.testing.assert_array_equal(np.asarray(out1[:, :10], np.float32),
+                                  np.asarray(out2[:, :10], np.float32))
+
+
+def test_slstm_step_matches_scan():
+    from repro.models.common import InitMaker
+    cfg = S.SLSTMConfig(d_model=32, n_heads=4)
+    params = S.slstm_params(InitMaker(jax.random.PRNGKey(5)), cfg, ())
+    x = _rand(jax.random.PRNGKey(6), (2, 12, 32)).astype(jnp.bfloat16)
+    y_full, st_full = S.slstm_forward(params, cfg, x)
+    st = None
+    outs = []
+    for t in range(12):
+        y, st = S.slstm_forward(params, cfg, x[:, t: t + 1], state=st)
+        outs.append(np.asarray(y[:, 0], np.float32))
+    got = np.stack(outs, axis=1)
+    np.testing.assert_allclose(got, np.asarray(y_full, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_causal_conv_decode_state():
+    w = _rand(jax.random.PRNGKey(7), (4, 6))
+    x = _rand(jax.random.PRNGKey(8), (2, 10, 6)).astype(jnp.bfloat16)
+    y_full, _ = S.causal_conv1d(x, w)
+    state = None
+    outs = []
+    for t in range(10):
+        y, state = S.causal_conv1d(x[:, t: t + 1], w, state)
+        outs.append(np.asarray(y[:, 0], np.float32))
+    np.testing.assert_allclose(np.stack(outs, 1),
+                               np.asarray(y_full, np.float32),
+                               rtol=2e-2, atol=2e-2)
