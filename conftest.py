@@ -1,0 +1,10 @@
+"""Repo-root pytest bootstrap.
+
+Pins the JAX platform to CPU *before* jax initializes its backends, so the
+tier-1 suite behaves identically on CPU-only containers and on hosts where
+an accelerator happens to be visible (tests are written against CPU
+numerics and host-device counts).
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,15 +1,21 @@
-"""End-to-end driver: mixed-precision LLM serving with batched requests.
+"""End-to-end driver: continuous-batching mixed-precision LLM serving.
 
 This is the system the paper targets — a quantized checkpoint (projections
 and experts in INT4/FP8/FP4 packed codes -> XtraMAC-style MACs; attention
-BF16) served with a prefill+decode engine over a KV cache.  Uses the
-reduced qwen3-moe config so it runs on the CPU container in ~a minute;
-pass --arch/--full to scale up.
+BF16) served as a *stream*: requests join the scheduler at different times,
+share one slot-based KV pool, emit tokens as decode batches advance, and
+retire as soon as they hit EOS or their token budget — freeing the slot for
+the next request.  Uses the reduced qwen3-moe config so it runs on the CPU
+container in ~a minute; pass --arch/--full to scale up.
 
 Run:  PYTHONPATH=src python examples/serve_mixed_precision.py
 """
 import argparse
+import os
+import sys
 import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import numpy as np
@@ -17,26 +23,12 @@ import numpy as np
 from repro.configs import get_config
 from repro.models.common import QuantMaker
 from repro.models import transformer as T
-from repro.serve import ServeConfig, ServingEngine
+from repro.serve import Request, SamplingParams, ServeConfig, ServingEngine, \
+    Scheduler
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=24)
-    ap.add_argument("--max-new", type=int, default=12)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch, smoke=not args.full)
-    print(f"== {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
-          f"({cfg.family}); schemes proj={cfg.scheme_proj} "
-          f"ffn={cfg.scheme_ffn}")
-    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0), plan={}))
-
-    # count packed vs dense parameter bytes — the paper's memory win
-    import jax.numpy as jnp
+def checkpoint_bytes(params):
+    """Packed vs dense parameter bytes — the paper's memory win."""
     from repro.models.common import QLinear
     packed_bytes = dense_equiv = 0.0
     for leaf in jax.tree_util.tree_flatten(
@@ -48,31 +40,74 @@ def main():
                              + leaf.scales.size * 4)
             dense_equiv += n_stack * leaf.shape[0] * leaf.shape[1] * 2
         else:
-            b = leaf.size * leaf.dtype.itemsize
-            packed_bytes += b
+            packed_bytes += leaf.size * leaf.dtype.itemsize
             dense_equiv += leaf.size * 2
-    print(f"checkpoint bytes: {packed_bytes/1e6:.2f} MB packed "
-          f"(bf16-dense equivalent {dense_equiv/1e6:.2f} MB -> "
-          f"{dense_equiv/packed_bytes:.2f}x smaller)")
+    return packed_bytes, dense_equiv
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=10)
+    ap.add_argument("--chunk", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=not args.full)
+    print(f"== {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+          f"({cfg.family}); schemes proj={cfg.scheme_proj} "
+          f"ffn={cfg.scheme_ffn}")
+    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0), plan={}))
+
+    pb, de = checkpoint_bytes(params)
+    print(f"checkpoint bytes: {pb/1e6:.2f} MB packed "
+          f"(bf16-dense equivalent {de/1e6:.2f} MB -> {de/pb:.2f}x smaller)")
 
     engine = ServingEngine(cfg, params, ServeConfig(
-        max_len=args.prompt_len + args.max_new))
-    rng = np.random.default_rng(0)
-    batch = {"tokens": rng.integers(
-        1, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)}
-    if cfg.family == "vlm":
-        batch["patches"] = jnp.full((args.batch, cfg.n_patches, cfg.d_model),
-                                    0.02, jnp.bfloat16)
-    if cfg.family == "audio":
-        batch["frames"] = jnp.full((args.batch, cfg.n_frames, cfg.d_model),
-                                   0.02, jnp.bfloat16)
+        max_len=args.prompt_len + args.max_new,
+        n_slots=args.n_slots, prefill_chunk=args.chunk))
+    sched = Scheduler(engine)
 
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab,
+                            (int(rng.integers(args.prompt_len // 2,
+                                              args.prompt_len + 1)),))
+               .astype(np.int32) for _ in range(args.requests)]
+
+    # Stagger arrivals: half up front, the rest trickle in while the first
+    # wave is mid-decode — continuous batching in one screenful.
     t0 = time.time()
-    out = engine.generate(batch, max_new_tokens=args.max_new)
-    dt = time.time() - t0
-    print(f"generated [{out['batch']} x {out['generated'].shape[1]}] tokens "
-          f"in {dt:.1f}s (incl. compile)")
-    print("sampled continuation ids:", out["generated"][0].tolist())
+    pending = list(enumerate(prompts))
+    for i, p in pending[: args.requests // 2]:
+        sched.submit(Request(prompt=p, sampling=SamplingParams(
+            max_new_tokens=args.max_new)))
+        print(f"[submit] req {i} (prompt {len(p)} tok)")
+    pending = pending[args.requests // 2:]
+
+    while sched.has_work or pending:
+        # trickle arrivals once decode is underway (mid-flight admission);
+        # if the scheduler ever drains first, submit immediately instead of
+        # spinning (e.g. --requests 1 submits nothing up front)
+        if pending and (sched.n_decode_steps >= 2 or not sched.has_work):
+            i, p = pending.pop(0)
+            sched.submit(Request(prompt=p, sampling=SamplingParams(
+                max_new_tokens=args.max_new)))
+            print(f"[submit] req {i} mid-flight (prompt {len(p)} tok)")
+        events = sched.step()
+        for req, slot, tok in events["emitted"]:
+            tag = " (first)" if req.n_generated == 1 else ""
+            print(f"[token ] req {req.id} slot {slot} -> {tok}{tag}")
+        for req in events["finished"]:
+            print(f"[retire] req {req.id}: {req.n_generated} tokens "
+                  f"({req.finish_reason}); "
+                  f"continuation={req.output_tokens}")
+
+    print(f"\nserved {args.requests} requests in {time.time() - t0:.1f}s "
+          f"(incl. compile)")
+    print("metrics:", sched.metrics.report())
 
 
 if __name__ == "__main__":

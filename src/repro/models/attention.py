@@ -91,15 +91,21 @@ def attend(q, k, v, *, causal: bool, q_offset=0, kv_chunk: int = 512,
 
 
 def _mask_bias(causal, q_offset, sq, sk, k_offset, kv_valid_len, b):
-    """[B or 1, Sq, Sk_chunk] additive f32 bias (0 or _NEG)."""
-    qpos = q_offset + jnp.arange(sq)[:, None]            # [Sq, 1]
-    kpos = k_offset + jnp.arange(sk)[None, :]            # [1, Sk]
-    ok = jnp.ones((sq, sk), bool)
-    if causal:
-        ok = ok & (kpos <= qpos)
-    bias = jnp.where(ok, 0.0, _NEG)[None]                # [1, Sq, Sk]
+    """[B or 1, Sq, Sk_chunk] additive f32 bias (0 or _NEG).
+
+    ``q_offset`` may be a scalar (whole batch at one position — the static
+    one-shot path) or a [B] vector (continuous batching: every cache slot
+    sits at its own length).
+    """
+    q_off = jnp.reshape(jnp.asarray(q_offset), (-1, 1, 1))   # [B or 1, 1, 1]
+    qpos = q_off + jnp.arange(sq)[None, :, None]             # [B or 1, Sq, 1]
+    kpos = k_offset + jnp.arange(sk)[None, None, :]          # [1, 1, Sk]
+    ok = jnp.broadcast_to(kpos <= qpos if causal else
+                          jnp.ones((1, 1, sk), bool),
+                          (qpos.shape[0], sq, sk))
+    bias = jnp.where(ok, 0.0, _NEG)                          # [B or 1, Sq, Sk]
     if kv_valid_len is not None:
-        valid = kpos[None] < kv_valid_len[:, None, None]  # [B, Sq, Sk]
+        valid = kpos < kv_valid_len[:, None, None]           # [B, 1, Sk]
         bias = jnp.where(valid, bias, _NEG)
     return bias
 
@@ -182,10 +188,13 @@ def gqa_forward(params, cfg: AttnConfig, x, *, positions=None,
     """x [B, S, D] -> (out [B, S, D], new_cache).
 
     cache = (k_cache [B, Smax, Hk, Dh], v_cache ...) with ``cache_index`` the
-    write offset (prefill: 0; decode: current length).  No cache: plain
-    causal self-attention over x itself.  ``attend_local``: write the cache
-    but attend over the freshly-computed k/v (prefill-from-empty: identical
-    math, and keeps the chunked scan off the sharded cache sequence axis).
+    write offset (prefill: 0; decode: current length).  ``cache_index`` may
+    be a [B] vector (decode only, s == 1): row i writes at its own slot
+    length — the continuous-batching path where every sequence in the batch
+    is at a different position.  No cache: plain causal self-attention over
+    x itself.  ``attend_local``: write the cache but attend over the
+    freshly-computed k/v (prefill-from-empty: identical math, and keeps the
+    chunked scan off the sharded cache sequence axis).
     """
     b, s, d = x.shape
     h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
@@ -193,9 +202,11 @@ def gqa_forward(params, cfg: AttnConfig, x, *, positions=None,
     k = shard_act(apply_linear(params["wk"], x).reshape(b, s, hk, dh), "bthd")
     v = shard_act(apply_linear(params["wv"], x).reshape(b, s, hk, dh), "bthd")
 
+    per_row = cache_index is not None and jnp.ndim(cache_index) == 1
     if positions is None:
-        base = 0 if cache_index is None else cache_index
-        positions = base + jnp.arange(s)[None, :]            # [1, S]
+        base = jnp.asarray(0 if cache_index is None else cache_index)
+        positions = (base[:, None] if per_row else base) \
+            + jnp.arange(s)[None, :]                         # [B or 1, S]
     if cfg.use_rope:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
@@ -203,10 +214,18 @@ def gqa_forward(params, cfg: AttnConfig, x, *, positions=None,
     new_cache = None
     if cache is not None:
         k_cache, v_cache = cache
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            k_cache, k.astype(k_cache.dtype), cache_index, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            v_cache, v.astype(v_cache.dtype), cache_index, axis=1)
+        if per_row:
+            assert s == 1, "per-row cache_index is a decode-only path"
+            rows = jnp.arange(b)
+            k_cache = k_cache.at[rows, cache_index].set(
+                k[:, 0].astype(k_cache.dtype))
+            v_cache = v_cache.at[rows, cache_index].set(
+                v[:, 0].astype(v_cache.dtype))
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, k.astype(k_cache.dtype), cache_index, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, v.astype(v_cache.dtype), cache_index, axis=1)
         new_cache = (k_cache, v_cache)
 
     if cache is None or attend_local:
@@ -214,7 +233,8 @@ def gqa_forward(params, cfg: AttnConfig, x, *, positions=None,
                      kv_chunk=cfg.kv_chunk)
     else:
         k_cache, v_cache = new_cache
-        valid = jnp.full((b,), cache_index + s, jnp.int32)
+        valid = jnp.broadcast_to(
+            jnp.asarray(cache_index + s, jnp.int32), (b,))
         out = attend(q, k_cache, v_cache, causal=cfg.causal,
                      q_offset=cache_index, kv_chunk=cfg.kv_chunk,
                      kv_valid_len=valid)
@@ -305,13 +325,16 @@ def mla_forward(params, cfg: MLAConfig, x, *, cache=None, cache_index=None,
     Prefill/train path expands K/V per position; the decode path (Sq==1)
     uses the *absorbed* formulation — scores and values computed directly in
     the compressed latent space (the MLA serving trick), so cached bytes are
-    kv_lora + d_head_rope per token regardless of head count.
+    kv_lora + d_head_rope per token regardless of head count.  As in
+    ``gqa_forward``, ``cache_index`` may be a [B] vector for per-slot decode.
     """
     b, s, d = x.shape
     h = cfg.n_heads
+    per_row = cache_index is not None and jnp.ndim(cache_index) == 1
     if positions is None:
-        base = 0 if cache_index is None else cache_index
-        positions = base + jnp.arange(s)[None, :]
+        base = jnp.asarray(0 if cache_index is None else cache_index)
+        positions = (base[:, None] if per_row else base) \
+            + jnp.arange(s)[None, :]
     q_nope, q_rope = _mla_queries(params, cfg, x, positions)
 
     ckr = apply_linear(params["w_dkv"], x)
@@ -324,14 +347,24 @@ def mla_forward(params, cfg: MLAConfig, x, *, cache=None, cache_index=None,
     q_off = 0
     if cache is not None:
         c_cache, r_cache = cache
-        new_cache = (
-            jax.lax.dynamic_update_slice_in_dim(
-                c_cache, c_kv.astype(c_cache.dtype), cache_index, axis=1),
-            jax.lax.dynamic_update_slice_in_dim(
-                r_cache, k_rope.astype(r_cache.dtype), cache_index, axis=1))
+        if per_row:
+            assert s == 1, "per-row cache_index is a decode-only path"
+            rows = jnp.arange(b)
+            new_cache = (
+                c_cache.at[rows, cache_index].set(
+                    c_kv[:, 0].astype(c_cache.dtype)),
+                r_cache.at[rows, cache_index].set(
+                    k_rope[:, 0].astype(r_cache.dtype)))
+        else:
+            new_cache = (
+                jax.lax.dynamic_update_slice_in_dim(
+                    c_cache, c_kv.astype(c_cache.dtype), cache_index, axis=1),
+                jax.lax.dynamic_update_slice_in_dim(
+                    r_cache, k_rope.astype(r_cache.dtype), cache_index, axis=1))
         if not attend_local:   # attend over the cache (decode / chunked fill)
             c_kv, k_rope = new_cache
-            valid = jnp.full((b,), cache_index + s, jnp.int32)
+            valid = jnp.broadcast_to(
+                jnp.asarray(cache_index + s, jnp.int32), (b,))
             q_off = cache_index
 
     if s == 1 and cache is not None:

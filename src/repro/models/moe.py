@@ -60,6 +60,11 @@ def moe_params(mk: Maker, cfg: MoEConfig, stack: Tuple[int, ...]) -> Dict[str, A
 
 
 def capacity(group_tokens: int, cfg: MoEConfig) -> int:
+    if group_tokens == 1:
+        # single-token groups (per-row decode): the token's top-k experts are
+        # distinct, so every assignment has rank 0 — capacity 1 is drop-free
+        # and keeps the decode buffer at [E, 1, D] per row
+        return 1
     c = math.ceil(group_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
     return max(4, c)  # floor avoids degenerate buffers for tiny groups
 

@@ -317,11 +317,20 @@ def _scan_stack(cfg, mode, body, x0, layer_params, cache):
 
 def forward(cfg: ModelConfig, params, batch: Dict[str, Any], *,
             cache: Optional[Dict] = None, cache_index=None, mode: str = "train"):
-    """Unified forward.  mode: train | prefill | decode.
+    """Unified forward.  mode: train | prefill | prefill_chunk | decode.
 
     batch: tokens [B, S]; vlm adds patches [B, Np, D]; audio adds frames
     [B, Sf, D].  Returns (logits [B, S(+Np), V], aux_loss, new_cache).
+
+    ``prefill_chunk`` is the continuous-batching prefill step (DESIGN.md §7):
+    like prefill it writes S new positions into the cache at ``cache_index``,
+    but it attends over the *cache* (earlier chunks of the same prompt are
+    already there) and returns logits for every chunk position, so the
+    caller can read the true last-token logits out of a padded final chunk.
+    ``decode`` additionally accepts a per-row [B] ``cache_index`` (each KV
+    slot at its own length — the serving scheduler's batch).
     """
+    assert mode in ("train", "prefill", "prefill_chunk", "decode"), mode
     tokens = batch["tokens"]
     x = _embed(cfg, params, tokens)
     positions = None
@@ -336,9 +345,13 @@ def forward(cfg: ModelConfig, params, batch: Dict[str, Any], *,
     if cfg.family == "audio":
         return _forward_audio(cfg, params, batch, x, cache, cache_index, mode)
 
-    # decode has 1 token per row: route the whole batch as ONE group so the
-    # expert capacity buffers stay tight (B*k*cf slots, not B*E*4)
-    moe_groups = 1 if mode == "decode" else None
+    # decode has 1 token per row: route every row as its OWN single-token
+    # group — drop-free (capacity 1 covers each token's k distinct experts)
+    # and row-independent, so one slot's tokens cannot depend on what else
+    # shares the decode batch (continuous batching admits strangers and
+    # rides garbage rows along in free slots; grouped routing would let
+    # them steal expert capacity from real requests)
+    moe_groups = None
     # prefill-from-empty: attend over local k/v (identical math; keeps the
     # KV-chunk scan off the sharded cache sequence axis)
     attend_local = mode == "prefill"

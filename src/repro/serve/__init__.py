@@ -1,3 +1,11 @@
-from .engine import ServeConfig, ServingEngine
+from .engine import SCHEDULABLE_FAMILIES, ServeConfig, ServingEngine
+from .kv_pool import KVCachePool
+from .metrics import ServeMetrics
+from .request import Request, RequestState, SamplingParams
+from .scheduler import Scheduler
 
-__all__ = ["ServeConfig", "ServingEngine"]
+__all__ = [
+    "KVCachePool", "Request", "RequestState", "SamplingParams",
+    "SCHEDULABLE_FAMILIES", "Scheduler", "ServeConfig", "ServeMetrics",
+    "ServingEngine",
+]

@@ -1,24 +1,39 @@
-"""Mixed-precision serving engine: batched prefill + decode with KV cache.
+"""Mixed-precision serving engine: step-level primitives over a KV pool.
 
 This is the system-level consumer of the paper's technique: checkpoint
 weights are stored in the per-layer mixed-precision plan (projections /
 experts in INT4/FP8/FP4/INT8 packed codes -> the XtraMAC-style MACs;
-attention in BF16), and the engine runs one jitted prefill and one jitted
-decode step over a persistent cache — the per-tile "datatype control
-signal" of the paper's GEMV engine becomes the static per-layer scheme in
-the compiled program (DESIGN.md §2: JAX traces static dtypes, so runtime
-switching is realized at layer granularity, which is the granularity the
-paper's own workloads switch at).
+attention in BF16), and the engine exposes three jitted steps over a
+persistent cache — the per-tile "datatype control signal" of the paper's
+GEMV engine becomes the static per-layer scheme in the compiled program
+(DESIGN.md §2: JAX traces static dtypes, so runtime switching is realized
+at layer granularity, which is the granularity the paper's own workloads
+switch at).
 
-Greedy sampling by default; temperature optional.  Designed so the same
-class drives the CPU smoke tests and (via pjit shardings from
-launch/steps.py) the production mesh.
+Step primitives (DESIGN.md §7):
+  * ``prefill_chunk_into_slot`` — write one fixed-size chunk of one
+    request's prompt into its KV pool slot (compiles once; prompts of any
+    length are a host-side loop of chunks, the final chunk zero-padded).
+  * ``prefill_into_slots``     — convenience loop of the above over whole
+    prompts; returns last-true-position logits per request.
+  * ``decode_slots``           — one decode step for ALL pool slots at
+    once, each row writing/attending at its own length (per-row
+    ``cache_index``).  Inactive slots ride along and are masked host-side;
+    their garbage write lands exactly where the slot's next real write
+    goes, so it is always overwritten before it could be attended.
+
+Both the continuous-batching ``Scheduler`` and the one-shot ``generate()``
+(kept as a thin wrapper: it submits every row to a private scheduler and
+drains it) drive these same primitives, so the two paths cannot drift —
+greedy one-shot output IS scheduler output by construction.  Families
+without a sliceable KV cache (ssm / hybrid / audio / vlm) keep the legacy
+static-batch loop.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -26,13 +41,22 @@ import numpy as np
 
 from repro.models import transformer as T
 
+from .kv_pool import KVCachePool, POOLABLE_FAMILIES
+
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    max_len: int = 512
+    max_len: int = 512        # per-slot KV capacity (prompt + new tokens)
     temperature: float = 0.0
     eos_id: int = -1          # -1: never stop early
     kv_dtype: jnp.dtype = jnp.bfloat16
+    n_slots: int = 8          # KV pool width = decode batch (static shape)
+    prefill_chunk: int = 16   # chunked-prefill granularity (static shape)
+
+
+# Families served through the slot pool / scheduler; VLM is poolable but its
+# per-request patch inputs are not threaded through Request yet.
+SCHEDULABLE_FAMILIES = ("dense", "moe")
 
 
 class ServingEngine:
@@ -43,6 +67,7 @@ class ServingEngine:
 
         mcfg = cfg
 
+        # ---- legacy one-shot steps (static batch, lockstep lengths) ----
         @jax.jit
         def prefill(params, batch, cache):
             logits, _, cache = T.forward(mcfg, params, batch, cache=cache,
@@ -56,25 +81,149 @@ class ServingEngine:
                                          mode="decode")
             return logits[:, -1], cache
 
+        # ---- pool-based steps (continuous batching) --------------------
+        # the pool cache is donated: the caller rebinds pool.cache to the
+        # result immediately, and without donation every token step would
+        # materialize a second copy of the whole [L, n_slots, capacity, ...]
+        # tree (the dominant memory/memcpy cost of the serving loop)
+        @partial(jax.jit, donate_argnums=(2,), static_argnums=(5,))
+        def prefill_chunk(params, tokens, cache, slot, offset, with_logits):
+            """tokens [1, C] into pool slot ``slot`` at position ``offset``;
+            returns ([C, V] logits, updated pool cache).  ``with_logits=False``
+            (non-final chunks, whose logits the caller discards) returns None
+            logits — XLA dead-code-eliminates the whole lm-head matmul."""
+            slot_cache = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+                cache)
+            logits, _, slot_cache = T.forward(
+                mcfg, params, {"tokens": tokens}, cache=slot_cache,
+                cache_index=offset, mode="prefill_chunk")
+            cache = jax.tree_util.tree_map(
+                lambda pool, upd: jax.lax.dynamic_update_slice_in_dim(
+                    pool, upd, slot, axis=1),
+                cache, slot_cache)
+            return (logits[0] if with_logits else None), cache
+
+        @partial(jax.jit, donate_argnums=(2,))
+        def decode_slots(params, tokens, cache, lengths):
+            """tokens [n_slots, 1]; row i writes/attends at lengths[i]."""
+            logits, _, cache = T.forward(mcfg, params, {"tokens": tokens},
+                                         cache=cache, cache_index=lengths,
+                                         mode="decode")
+            return logits[:, -1], cache
+
         self._prefill = prefill
         self._decode = decode
+        self._prefill_chunk = prefill_chunk
+        self._decode_slots = decode_slots
 
+    # ------------------------------------------------------------------
+    # Pool-based step primitives (the scheduler's interface)
+    # ------------------------------------------------------------------
+    def new_pool(self, n_slots: Optional[int] = None,
+                 max_len: Optional[int] = None) -> KVCachePool:
+        return KVCachePool(self.cfg, n_slots or self.scfg.n_slots,
+                           max_len or self.scfg.max_len,
+                           kv_dtype=self.scfg.kv_dtype,
+                           align=self.scfg.prefill_chunk)
+
+    def prefill_chunk_into_slot(self, pool: KVCachePool, slot: int,
+                                prompt: np.ndarray, offset: int):
+        """Write prompt[offset : offset+C] into ``slot``.  For the prompt's
+        final chunk, returns the [C, V] chunk logits (pad positions carry
+        garbage — callers index the true last position); earlier chunks
+        return None and skip the lm-head compute entirely.  Advances
+        ``pool.lengths[slot]``."""
+        C = self.scfg.prefill_chunk
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        n = min(C, prompt.size - offset)
+        assert n > 0, (offset, prompt.size)
+        assert offset + n <= pool.max_len, "prompt exceeds slot capacity"
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :n] = prompt[offset:offset + n]
+        final = offset + n >= prompt.size
+        logits, pool.cache = self._prefill_chunk(
+            self.params, jnp.asarray(chunk), pool.cache,
+            jnp.int32(slot), jnp.int32(offset), final)
+        pool.lengths[slot] = offset + n
+        return jax.block_until_ready(logits) if final else None
+
+    def prefill_into_slots(self, pool: KVCachePool, slots: Sequence[int],
+                           prompts: Sequence[np.ndarray]) -> List:
+        """Full chunked prefill of each (slot, prompt); returns the [V]
+        logits at each prompt's true last position."""
+        C = self.scfg.prefill_chunk
+        out = []
+        for slot, prompt in zip(slots, prompts):
+            prompt = np.asarray(prompt, np.int32).reshape(-1)
+            logits = None
+            for off in range(0, prompt.size, C):
+                logits = self.prefill_chunk_into_slot(pool, slot, prompt, off)
+            out.append(logits[(prompt.size - 1) % C])
+        return out
+
+    def decode_slots(self, pool: KVCachePool, tokens: np.ndarray):
+        """One decode step over every pool slot.  ``tokens`` [n_slots]; row
+        i is written at pool.lengths[i].  Returns [n_slots, V] logits.  The
+        caller commits the write by incrementing ``pool.lengths`` for the
+        rows it considers active."""
+        tokens = np.asarray(tokens, np.int32).reshape(pool.n_slots, 1)
+        logits, pool.cache = self._decode_slots(
+            self.params, jnp.asarray(tokens), pool.cache,
+            jnp.asarray(pool.lengths))
+        return jax.block_until_ready(logits)
+
+    # ------------------------------------------------------------------
+    # One-shot generation (backwards-compatible wrapper)
+    # ------------------------------------------------------------------
+    def generate(self, batch: Dict, *, max_new_tokens: int,
+                 seed: int = 0) -> Dict:
+        """batch: {'tokens': [B, S]} (+ stubs).  Returns generated ids
+        [B, T] (post-EOS positions masked to 0), per-row lengths and finish
+        reasons."""
+        if self.cfg.family in SCHEDULABLE_FAMILIES:
+            return self._generate_scheduled(batch, max_new_tokens, seed)
+        return self._generate_legacy(batch, max_new_tokens, seed)
+
+    def _generate_scheduled(self, batch, max_new_tokens: int, seed: int):
+        from .request import Request, SamplingParams
+        from .scheduler import Scheduler
+
+        tokens = np.asarray(batch["tokens"], np.int32)
+        b, s = tokens.shape
+        assert s + max_new_tokens <= self.scfg.max_len, \
+            "grow ServeConfig.max_len"
+        sched = Scheduler(self)
+        reqs = [sched.submit(Request(
+            prompt=tokens[i],
+            sampling=SamplingParams(temperature=self.scfg.temperature,
+                                    max_new_tokens=max_new_tokens,
+                                    eos_id=self.scfg.eos_id, seed=seed)))
+            for i in range(b)]
+        sched.run()
+        width = max(r.n_generated for r in reqs)
+        gen = np.zeros((b, width), np.int32)
+        lengths = np.zeros((b,), np.int32)
+        for i, r in enumerate(reqs):
+            gen[i, :r.n_generated] = r.output_tokens
+            lengths[i] = r.n_generated
+        return {"generated": gen, "prompt_len": s, "batch": b,
+                "lengths": lengths,
+                "finish_reasons": [r.finish_reason for r in reqs]}
+
+    # ---- legacy static-batch loop (ssm / hybrid / audio / vlm) ---------
     def _sample(self, logits, key):
         if self.scfg.temperature <= 0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return jax.random.categorical(
             key, logits / self.scfg.temperature).astype(jnp.int32)
 
-    def generate(self, batch: Dict, *, max_new_tokens: int,
-                 seed: int = 0) -> Dict:
-        """batch: {'tokens': [B, S]} (+ stubs).  Returns generated ids and
-        per-step logits summaries."""
+    def _generate_legacy(self, batch, max_new_tokens: int, seed: int):
         cfg, scfg = self.cfg, self.scfg
         tokens = jnp.asarray(batch["tokens"], jnp.int32)
         b, s = tokens.shape
         prefix = cfg.n_patches if cfg.family == "vlm" else 0
-        max_len = prefix + s + max_new_tokens
-        assert max_len <= scfg.max_len + prefix + s, "grow ServeConfig.max_len"
+        assert s + max_new_tokens <= scfg.max_len, "grow ServeConfig.max_len"
 
         cache = T.init_cache(cfg, b, prefix + s + max_new_tokens,
                              kv_dtype=scfg.kv_dtype)
@@ -94,10 +243,23 @@ class ServingEngine:
             out.append(np.asarray(tok))
             if scfg.eos_id >= 0:
                 finished |= np.asarray(tok) == scfg.eos_id
-                if finished.all():
+                if finished.all():   # whole batch retired: stop burning steps
                     break
         gen = np.stack(out, axis=1)
-        return {"generated": gen, "prompt_len": s, "batch": b}
+        lengths = np.full((b,), gen.shape[1], np.int32)
+        reasons = ["length"] * b
+        if scfg.eos_id >= 0:
+            # mask everything after each row's first EOS (a static batch
+            # cannot retire rows early, but their post-EOS garbage must not
+            # leak into the output)
+            eos = gen == scfg.eos_id
+            seen_before = np.cumsum(eos, axis=1) - eos
+            keep = seen_before == 0
+            gen = np.where(keep, gen, 0)
+            lengths = keep.sum(1).astype(np.int32)
+            reasons = ["eos" if eos[i].any() else "length" for i in range(b)]
+        return {"generated": gen, "prompt_len": s, "batch": b,
+                "lengths": lengths, "finish_reasons": reasons}
 
     def score(self, batch: Dict) -> np.ndarray:
         """Teacher-forced mean NLL per row (serving-quality check)."""

@@ -1,0 +1,97 @@
+"""Slot-based KV-cache pool for continuous batching.
+
+One fixed cache tree of shape ``[n_layers, n_slots, max_len, ...]`` is
+allocated once (per-layer K/V slabs for GQA, compressed latents for MLA)
+and shared by every request the engine ever serves: a request checks a
+*slot* (one batch row) out of the pool for its lifetime and the slot is
+returned on retirement.  Because the tree's shapes never change, the jitted
+prefill-chunk and decode steps compile exactly once — admission, retirement
+and slot reuse are pure host-side bookkeeping plus in-place
+``dynamic_update_slice`` / scatter writes (DESIGN.md §7).
+
+This is paging at slot granularity: the unit of allocation is a whole
+``max_len`` row rather than a fixed-size token block.  That forgoes
+vLLM-style fine-grained page sharing but needs no gather indirection inside
+the kernels — the right trade at the current scale, and the pool interface
+(alloc/free/lengths) is what a block-paged backend would slot in behind.
+
+Slot hygiene: freed slots are NOT zeroed.  Every read is masked by the
+explicit per-row valid length the scheduler passes to the model
+(``kv_valid_len``), so stale bytes from a previous tenant are never
+attended; the next tenant's prefill overwrites positions [0, P) before any
+read of them.  ``lengths[slot]`` is the single source of truth for how many
+positions of a slot are committed.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+# Families whose cache tree is stacked per-layer KV slabs with a batch
+# (= slot) axis at position 1.  SSM/hybrid state pools would be a different
+# (cheaper) layout; audio additionally caches the encoder output.
+POOLABLE_FAMILIES = ("dense", "moe", "vlm")
+
+
+class KVCachePool:
+    def __init__(self, cfg: T.ModelConfig, n_slots: int, max_len: int, *,
+                 kv_dtype=jnp.bfloat16, align: int = 1):
+        """``align``: allocation granularity of the sequence axis.  The
+        engine passes its prefill chunk size so every chunk's write window
+        [k*C, (k+1)*C) fits the slab even when ``max_len`` is not
+        chunk-aligned — ``dynamic_update_slice`` clamps out-of-range
+        starts, which would silently shift the write otherwise.  Reads are
+        bounded by per-row valid lengths, so the pad tail is never
+        attended."""
+        if cfg.family not in POOLABLE_FAMILIES:
+            raise ValueError(
+                f"KVCachePool supports {POOLABLE_FAMILIES} families, "
+                f"not {cfg.family!r} (recurrent/enc-dec state pooling is a "
+                f"separate layout)")
+        assert n_slots >= 1 and max_len >= 1 and align >= 1
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len                            # logical capacity
+        self.capacity = -(-max_len // align) * align      # allocated positions
+        self.cache = T.init_cache(cfg, n_slots, self.capacity,
+                                  kv_dtype=kv_dtype)
+        self.lengths = np.zeros((n_slots,), np.int32)   # committed positions
+        self._free: List[int] = list(range(n_slots))    # min-heap of slot ids
+        heapq.heapify(self._free)
+
+    # -- allocation --------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_slots - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return self.n_used / self.n_slots
+
+    def alloc(self) -> Optional[int]:
+        """Check out the lowest free slot id (deterministic placement), or
+        None when the pool is full."""
+        if not self._free:
+            return None
+        slot = heapq.heappop(self._free)
+        self.lengths[slot] = 0
+        return slot
+
+    def free(self, slot: int) -> None:
+        assert 0 <= slot < self.n_slots
+        assert slot not in self._free, f"double free of slot {slot}"
+        self.lengths[slot] = 0
+        heapq.heappush(self._free, slot)
+
+    def room(self, slot: int) -> int:
+        """Cache positions still writable in ``slot``."""
+        return self.max_len - int(self.lengths[slot])

@@ -1,0 +1,87 @@
+"""Request / sequence state machine for the continuous-batching scheduler.
+
+A ``Request`` is one user generation: a prompt, per-request sampling
+parameters, and the lifecycle
+
+    WAITING -> PREFILL -> DECODE -> FINISHED
+
+WAITING:  submitted, no KV slot yet (FCFS admission queue).
+PREFILL:  owns a KV slot; the prompt is being written cache-chunk by
+          cache-chunk (``prefill_pos`` tracks committed positions).
+DECODE:   prompt fully in cache; one token per engine decode step.
+FINISHED: retired (EOS, length limit, or slot-capacity limit); the KV slot
+          has been returned to the pool.
+
+Randomness is *per request and per step*: the sampling key is
+``fold_in(fold_in(PRNGKey(seed), request_id), n_generated)``, so a
+request's sampled continuation is a pure function of (seed, id, prompt,
+weights) — independent of which slot it landed in, what else shared its
+decode batches, or when it was admitted.  That is what makes continuous
+batching testable against one-shot generation (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0      # <= 0: greedy
+    max_new_tokens: int = 16
+    eos_id: int = -1              # -1: never stop on a token
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                       # [P] int32 token ids
+    sampling: SamplingParams = SamplingParams()
+    id: Optional[int] = None                 # assigned by the scheduler
+    state: RequestState = RequestState.WAITING
+    slot: Optional[int] = None               # KV pool slot while admitted
+    prefill_pos: int = 0                     # prompt positions in cache
+    output_tokens: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: Optional[str] = None      # eos | length | capacity
+    # --- timing (scheduler clock; see metrics.py) ---
+    arrival_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    token_times: List[float] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        assert self.prompt.size > 0, "empty prompt"
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.size)
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.output_tokens)
+
+    @property
+    def last_token(self) -> int:
+        return self.output_tokens[-1]
+
+    @property
+    def is_finished(self) -> bool:
+        return self.state == RequestState.FINISHED
+
+    def step_key(self):
+        """PRNG key for sampling generated token #``n_generated``."""
+        base = jax.random.fold_in(jax.random.PRNGKey(self.sampling.seed),
+                                  self.id or 0)
+        return jax.random.fold_in(base, self.n_generated)

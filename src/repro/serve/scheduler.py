@@ -1,0 +1,210 @@
+"""Continuous-batching scheduler: FCFS admission over a slot-based KV pool.
+
+Each ``step()`` does up to three things, all against statically-shaped
+jitted engine primitives (DESIGN.md §7):
+
+  1. **Admission** — FCFS: while a KV slot is free, the oldest WAITING
+     request checks one out and enters PREFILL.  Requests can join at any
+     time, including mid-flight between decode steps.
+  2. **One prefill chunk** — the oldest PREFILL request advances by one
+     fixed-size chunk (chunked prefill *interleaved* with decode, so a long
+     prompt never stalls in-flight decodes for more than a chunk).  When
+     the prompt completes, its first token is sampled from the chunk
+     logits — that token is the request's TTFT event.
+  3. **One decode batch** — every DECODE-state slot advances one token in
+     a single [n_slots] batched step.  Inactive slots ride along (static
+     shapes) and are ignored host-side.
+
+Retirement (EOS / max-new-tokens / slot capacity) frees the slot
+immediately, so the next ``step()`` can admit a waiting request into it —
+finished rows never burn decode steps, which is precisely what the old
+static-batch ``generate()`` got wrong.
+
+Determinism: sampling keys are per (request, step) — see request.py — and
+row computations are independent of batch composition (dense ops are
+row-wise; MoE decode routes each row as its own drop-free single-token
+group), so a request's greedy output is identical whether it was served
+alone, in a full one-shot batch, or admitted mid-flight next to strangers.
+The clock is injectable for metric tests.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kv_pool import KVCachePool
+from .metrics import ServeMetrics
+from .request import Request, RequestState, SamplingParams  # noqa: F401
+
+
+@jax.jit
+def _sample_tokens(logits, keys, temperatures):
+    """Batched per-row sampling: logits [N, V], keys [N, 2], temps [N].
+    Greedy when a row's temperature <= 0, else temperature-scaled
+    categorical.  One dispatch + one host transfer for the whole decode
+    batch instead of N round-trips on the serving hot path (the single
+    first-token sample reuses this with N=1 so there is exactly one
+    sampling rule)."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(temperatures, jnp.float32(1e-6))[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, logits / t)
+    return jnp.where(temperatures <= 0, greedy, sampled.astype(jnp.int32))
+
+
+def _sample_one(logits, key, temperature) -> int:
+    return int(_sample_tokens(
+        logits[None], jnp.asarray(key)[None],
+        jnp.asarray([temperature], jnp.float32))[0])
+
+
+class Scheduler:
+    def __init__(self, engine, *, pool: Optional[KVCachePool] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.engine = engine
+        if pool is None:
+            pool = engine.new_pool()
+        else:
+            # an injected pool must be chunk-aligned, or a final-chunk write
+            # window past ``capacity`` gets clamp-shifted by
+            # dynamic_update_slice onto committed positions (silent KV
+            # corruption) — engine.new_pool() aligns automatically
+            C = engine.scfg.prefill_chunk
+            need = -(-pool.max_len // C) * C
+            if pool.capacity < need:
+                raise ValueError(
+                    f"pool capacity {pool.capacity} not aligned to prefill "
+                    f"chunk {C} (need >= {need}); build it with "
+                    f"engine.new_pool() or KVCachePool(..., align={C})")
+        self.pool = pool
+        self.waiting: Deque[Request] = deque()
+        self.running: Dict[int, Request] = {}      # slot -> Request
+        self.finished: List[Request] = []
+        self.metrics = ServeMetrics(self.pool.n_slots)
+        self._clock = clock
+        self._next_id = 0
+        self.n_steps = 0
+        self.n_decode_steps = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> Request:
+        """FCFS enqueue.  Validates the request fits a slot end-to-end."""
+        need = req.prompt_len + req.sampling.max_new_tokens
+        if need > self.pool.max_len:
+            raise ValueError(
+                f"request needs {need} cache positions "
+                f"(prompt {req.prompt_len} + max_new "
+                f"{req.sampling.max_new_tokens}) > slot capacity "
+                f"{self.pool.max_len}")
+        if req.id is None:
+            req.id = self._next_id
+        self._next_id = max(self._next_id, req.id) + 1
+        req.state = RequestState.WAITING
+        req.arrival_time = self._clock()
+        self.waiting.append(req)
+        self.metrics.on_arrival(req.arrival_time)
+        return req
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # ------------------------------------------------------------------
+    def step(self) -> Dict[str, List]:
+        """One scheduling round.  Returns the tokens emitted this round
+        (``emitted``: list of (request, slot, token)) and requests retired
+        (``finished``)."""
+        emitted: List = []
+        finished_now: List[Request] = []
+
+        # 1. admission: free slots go to the oldest waiting requests
+        while self.waiting and self.pool.n_free:
+            req = self.waiting.popleft()
+            req.slot = self.pool.alloc()
+            req.state = RequestState.PREFILL
+            req.prefill_pos = 0
+            self.running[req.slot] = req
+
+        # 2. one prefill chunk for the oldest mid-prefill request
+        pre = [r for r in self.running.values()
+               if r.state is RequestState.PREFILL]
+        if pre:
+            req = min(pre, key=lambda r: r.id)
+            chunk_logits = self.engine.prefill_chunk_into_slot(
+                self.pool, req.slot, req.prompt, req.prefill_pos)
+            C = self.engine.scfg.prefill_chunk
+            req.prefill_pos = min(req.prefill_pos + C, req.prompt_len)
+            if req.prefill_pos >= req.prompt_len:
+                req.state = RequestState.DECODE
+                tok = _sample_one(chunk_logits[(req.prompt_len - 1) % C],
+                                  req.step_key(), req.sampling.temperature)
+                self._emit(req, tok, emitted, finished_now)
+
+        # 3. one decode batch over every DECODE slot
+        dec = sorted((r for r in self.running.values()
+                      if r.state is RequestState.DECODE), key=lambda r: r.id)
+        if dec:
+            n = self.pool.n_slots
+            tokens = np.zeros((n,), np.int32)
+            keys = np.zeros((n, 2), np.uint32)       # inactive rows: key 0
+            temps = np.zeros((n,), np.float32)
+            for r in dec:
+                tokens[r.slot] = r.last_token
+                keys[r.slot] = np.asarray(r.step_key())
+                temps[r.slot] = r.sampling.temperature
+            logits = self.engine.decode_slots(self.pool, tokens)
+            self.n_decode_steps += 1
+            toks = np.asarray(_sample_tokens(logits, jnp.asarray(keys),
+                                             jnp.asarray(temps)))
+            for r in dec:
+                # the input token's KV was just written at lengths[slot]
+                self.pool.lengths[r.slot] += 1
+                self._emit(r, int(toks[r.slot]), emitted, finished_now)
+
+        self.n_steps += 1
+        self.metrics.on_step(self._clock(), self.pool.n_used)
+        return {"emitted": emitted, "finished": finished_now}
+
+    def run(self, max_steps: Optional[int] = None) -> None:
+        """Step until every submitted request is FINISHED."""
+        steps = 0
+        while self.has_work:
+            if max_steps is not None and steps >= max_steps:
+                raise RuntimeError(f"scheduler did not drain in {steps} steps")
+            self.step()
+            steps += 1
+
+    # ------------------------------------------------------------------
+    def _emit(self, req: Request, tok: int, emitted: List,
+              finished_now: List[Request]) -> None:
+        now = self._clock()
+        req.output_tokens.append(tok)
+        req.token_times.append(now)
+        if req.first_token_time is None:
+            req.first_token_time = now
+        emitted.append((req, req.slot, tok))
+        sp = req.sampling
+        if sp.eos_id >= 0 and tok == sp.eos_id:
+            self._retire(req, "eos", now, finished_now)
+        elif req.n_generated >= sp.max_new_tokens:
+            self._retire(req, "length", now, finished_now)
+        elif req.prompt_len + req.n_generated >= self.pool.max_len:
+            # defensive: submit() bounds prompt+max_new, so this only fires
+            # for requests constructed around the validation
+            self._retire(req, "capacity", now, finished_now)
+
+    def _retire(self, req: Request, reason: str, now: float,
+                finished_now: List[Request]) -> None:
+        req.state = RequestState.FINISHED
+        req.finish_reason = reason
+        req.finish_time = now
+        del self.running[req.slot]
+        self.pool.free(req.slot)
+        req.slot = None
+        self.finished.append(req)
+        finished_now.append(req)
+        self.metrics.on_finish(req)

@@ -1,7 +1,9 @@
 """Hypothesis property tests on quantization + packing invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import formats as F
 from repro.quant.pack import codes_per_word, pack_codes_np, unpack_codes

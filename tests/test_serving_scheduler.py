@@ -1,0 +1,232 @@
+"""Continuous-batching scheduler tests: one-shot equivalence, slot reuse,
+mid-flight admission, EOS retirement, and metrics sanity."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.common import InitMaker
+from repro.models import transformer as T
+from repro.serve import (KVCachePool, Request, RequestState, SamplingParams,
+                         ServeConfig, ServingEngine, Scheduler)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_config("granite-8b", smoke=True)
+    params = T.build_params(cfg, InitMaker(jax.random.PRNGKey(0)))
+    return ServingEngine(cfg, params, ServeConfig(
+        max_len=48, n_slots=4, prefill_chunk=8))
+
+
+def _prompts(engine, n, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, engine.cfg.vocab, (lens[i % len(lens)],))
+            .astype(np.int32) for i in range(n)]
+
+
+def test_scheduler_bit_identical_to_one_shot_generate(engine):
+    """Greedy continuous-batching output == one-shot generate(), token for
+    token, for the same prompts."""
+    prompts = _prompts(engine, 3, [8, 8, 8], seed=3)
+    one_shot = engine.generate({"tokens": np.stack(prompts)},
+                               max_new_tokens=6)["generated"]
+
+    sched = Scheduler(engine)
+    reqs = [sched.submit(Request(prompt=p,
+                                 sampling=SamplingParams(max_new_tokens=6)))
+            for p in prompts]
+    sched.run(max_steps=200)
+    for row, req in zip(one_shot, reqs):
+        np.testing.assert_array_equal(row, np.asarray(req.output_tokens))
+
+
+def test_mid_flight_admission_matches_solo_run(engine):
+    """A request admitted after other requests' decode has started produces
+    exactly the tokens it would produce served alone."""
+    prompts = _prompts(engine, 3, [8, 6, 10], seed=4)
+    solo = [engine.generate({"tokens": p[None]}, max_new_tokens=5)
+            ["generated"][0] for p in prompts]
+
+    sched = Scheduler(engine)
+    first = [sched.submit(Request(prompt=p,
+                                  sampling=SamplingParams(max_new_tokens=5)))
+             for p in prompts[:2]]
+    # run until decode has definitely started for the early arrivals
+    while sched.n_decode_steps < 2:
+        sched.step()
+    assert any(r.n_generated > 0 for r in first)
+    late = sched.submit(Request(prompt=prompts[2],
+                                sampling=SamplingParams(max_new_tokens=5)))
+    sched.run(max_steps=200)
+    for req, want in zip(first + [late], solo):
+        assert req.is_finished and req.finish_reason == "length"
+        np.testing.assert_array_equal(np.asarray(req.output_tokens), want)
+
+
+def test_slot_reuse_after_retirement(engine):
+    """More requests than slots: retirement frees slots for the queue, every
+    request completes, and the pool never over-allocates."""
+    prompts = _prompts(engine, 7, [6, 9, 5], seed=5)
+    sched = Scheduler(engine)
+    reqs = [sched.submit(Request(prompt=p,
+                                 sampling=SamplingParams(max_new_tokens=4)))
+            for p in prompts]
+    max_used = 0
+    while sched.has_work:
+        sched.step()
+        assert sched.pool.n_used <= sched.pool.n_slots
+        max_used = max(max_used, sched.pool.n_used)
+    assert max_used == sched.pool.n_slots        # queue actually saturated it
+    assert all(r.n_generated == 4 for r in reqs)
+    assert sched.pool.n_free == sched.pool.n_slots
+    # a retired slot was reused: 7 requests > 4 slots
+    assert len(sched.finished) == 7
+
+
+def test_scheduler_matches_generate_under_queueing(engine):
+    """B > n_slots goes through WAITING; output still equals a one-shot
+    batch of the same prompts (generate() itself queues internally)."""
+    prompts = _prompts(engine, 6, [8], seed=6)   # 6 requests, 4 slots
+    out = engine.generate({"tokens": np.stack(prompts)},
+                          max_new_tokens=4)
+    assert out["generated"].shape == (6, 4)
+    solo = engine.generate({"tokens": prompts[5][None]}, max_new_tokens=4)
+    np.testing.assert_array_equal(out["generated"][5], solo["generated"][0])
+
+
+def test_eos_retires_and_masks(engine):
+    """EOS retires the request (frees its slot) and the wrapper masks
+    post-EOS positions."""
+    prompts = _prompts(engine, 1, [8], seed=7)
+    probe = engine.generate({"tokens": prompts[0][None]}, max_new_tokens=6)
+    eos = int(probe["generated"][0][2])          # force EOS at 3rd token
+    cfg = engine.cfg
+    eng = ServingEngine(cfg, engine.params, ServeConfig(
+        max_len=48, n_slots=4, prefill_chunk=8, eos_id=eos))
+    out = eng.generate({"tokens": prompts[0][None]}, max_new_tokens=6)
+    L = int(out["lengths"][0])
+    assert out["finish_reasons"][0] == "eos"
+    assert out["generated"][0][L - 1] == eos
+    assert (out["generated"][0][L:] == 0).all()
+    assert L <= 3
+
+
+def test_request_validation(engine):
+    sched = Scheduler(engine)
+    with pytest.raises(ValueError):
+        sched.submit(Request(
+            prompt=np.ones(40, np.int32),
+            sampling=SamplingParams(max_new_tokens=20)))   # 60 > max_len 48
+
+
+def test_injected_pool_must_be_chunk_aligned(engine):
+    """An externally built pool without chunk alignment would clamp-shift
+    final-chunk writes onto committed KV; the scheduler rejects it."""
+    bad = KVCachePool(engine.cfg, n_slots=2, max_len=20)   # align=1 default
+    with pytest.raises(ValueError):
+        Scheduler(engine, pool=bad)                        # chunk 8: need 24
+    ok = KVCachePool(engine.cfg, n_slots=2, max_len=20, align=8)
+    Scheduler(engine, pool=ok)
+
+
+def test_metrics_sanity(engine):
+    """Virtual clock: TTFT <= total latency per request, ITL count matches
+    token count, occupancy is a valid time-weighted fraction."""
+    t = {"now": 0.0}
+
+    def clock():
+        t["now"] += 0.125
+        return t["now"]
+
+    sched = Scheduler(engine, clock=clock)
+    prompts = _prompts(engine, 5, [8, 12], seed=8)
+    reqs = [sched.submit(Request(prompt=p,
+                                 sampling=SamplingParams(max_new_tokens=4)))
+            for p in prompts]
+    sched.run(max_steps=300)
+    for r in reqs:
+        ttft = r.first_token_time - r.arrival_time
+        e2e = r.finish_time - r.arrival_time
+        assert 0 < ttft <= e2e
+        assert len(r.token_times) == r.n_generated
+        assert r.token_times == sorted(r.token_times)
+    rep = sched.metrics.report()
+    assert rep["n_requests"] == 5
+    assert rep["total_new_tokens"] == 20
+    assert rep["ttft_mean_s"] <= rep["e2e_latency_mean_s"]
+    assert 0.0 < rep["slot_occupancy_mean"] <= 1.0
+    assert len(sched.metrics.itl) == sum(r.n_generated - 1 for r in reqs)
+
+
+def test_moe_decode_composition_independent():
+    """Per-row drop-free decode routing: a MoE request's greedy tokens do
+    not depend on what else shares the decode batch (grouped capacity
+    routing would let co-batched rows steal expert slots)."""
+    cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
+    params = T.build_params(cfg, InitMaker(jax.random.PRNGKey(0)))
+    eng = ServingEngine(cfg, params, ServeConfig(
+        max_len=24, n_slots=4, prefill_chunk=8))
+    p = np.random.default_rng(11).integers(
+        1, cfg.vocab, (3, 7)).astype(np.int32)
+    batched = eng.generate({"tokens": p}, max_new_tokens=5)["generated"]
+    solo = eng.generate({"tokens": p[:1]}, max_new_tokens=5)["generated"]
+    np.testing.assert_array_equal(batched[0], solo[0])
+
+
+def test_prefill_into_slots_matches_scheduler_first_token(engine):
+    """The whole-prompt prefill primitive lands on the same last-position
+    logits the scheduler's chunk loop sees: greedy first tokens agree."""
+    prompts = _prompts(engine, 2, [11, 8], seed=9)   # 11: padded final chunk
+    sched = Scheduler(engine)
+    reqs = [sched.submit(Request(prompt=p,
+                                 sampling=SamplingParams(max_new_tokens=1)))
+            for p in prompts]
+    sched.run(max_steps=50)
+
+    pool = engine.new_pool()
+    slots = [pool.alloc(), pool.alloc()]
+    last_logits = engine.prefill_into_slots(pool, slots, prompts)
+    for req, logits, slot, p in zip(reqs, last_logits, slots, prompts):
+        assert req.output_tokens[0] == int(np.argmax(np.asarray(logits)))
+        assert pool.lengths[slot] == len(p)
+
+
+def test_unaligned_max_len_pads_capacity(engine):
+    """max_len that is not a multiple of prefill_chunk must not shift chunk
+    writes (dynamic_update_slice clamps): the pool pads its slab."""
+    eng = ServingEngine(engine.cfg, engine.params, ServeConfig(
+        max_len=12, n_slots=2, prefill_chunk=16))
+    pool = eng.new_pool()
+    assert pool.max_len == 12 and pool.capacity == 16
+    prompts = _prompts(engine, 2, [8], seed=10)
+    out = eng.generate({"tokens": np.stack(prompts)}, max_new_tokens=4)
+    out2 = eng.generate({"tokens": np.stack(prompts)}, max_new_tokens=4)
+    np.testing.assert_array_equal(out["generated"], out2["generated"])
+    assert out["generated"].shape == (2, 4)
+
+
+def test_kv_pool_alloc_free():
+    cfg = get_config("granite-8b", smoke=True)
+    pool = KVCachePool(cfg, n_slots=3, max_len=16)
+    a, b2, c = pool.alloc(), pool.alloc(), pool.alloc()
+    assert (a, b2, c) == (0, 1, 2) and pool.alloc() is None
+    pool.lengths[1] = 9
+    pool.free(1)
+    assert pool.lengths[1] == 0 and pool.n_free == 1
+    assert pool.alloc() == 1                     # lowest free id, reused
+    with pytest.raises(AssertionError):
+        pool.free(0)
+        pool.free(0)                             # double free
+
+
+def test_pool_rejects_recurrent_families():
+    cfg = get_config("xlstm-350m", smoke=True)
+    with pytest.raises(ValueError):
+        KVCachePool(cfg, n_slots=2, max_len=16)
+
+
+def test_request_state_machine():
+    r = Request(prompt=np.arange(1, 5, dtype=np.int32))
+    assert r.state is RequestState.WAITING and r.prompt_len == 4
+    assert r.n_generated == 0 and not r.is_finished

@@ -38,6 +38,7 @@ def test_serving_greedy_deterministic():
     np.testing.assert_array_equal(a, b)
 
 
+@pytest.mark.slow
 def test_train_resume_bit_identical():
     from repro.launch.train import train
     with tempfile.TemporaryDirectory() as d1, \
@@ -101,6 +102,7 @@ print("SUBPROCESS_OK", loss)
 """
 
 
+@pytest.mark.slow
 def test_pjit_train_step_runs_on_8_devices():
     """Actually EXECUTES the sharded train step on 8 host devices."""
     import os
