@@ -7,11 +7,18 @@ later requests are admitted mid-flight — between decode steps of the
 earlier ones — exercising chunked-prefill interleaving and slot reuse
 exactly as production traffic would.
 
+``--kv-dtype`` sweeps the pool storage dtype (DESIGN.md §9): each sweep
+point runs the same seeded workload at one dtype and reports slots x tok/s
+x TTFT for its cache cost.  With ``--cache-budget-mb`` the slot count is
+*derived* from the budget per dtype, so the sweep directly measures the
+quantization -> concurrency trade (int8/fp8 fit ~2x the slots of bf16).
+One JSON is emitted per sweep point (``--out-dir`` to write files).
+
 Smoke (CPU, ~1 min incl. compile):
     python benchmarks/serve_bench.py
-Heavier:
-    python benchmarks/serve_bench.py --arch qwen3-moe-30b-a3b \
-        --requests 32 --n-slots 8 --rate 8
+Quantized-cache sweep at a fixed budget:
+    python benchmarks/serve_bench.py --kv-dtype bf16,fp8,int8 \
+        --cache-budget-mb 2 --out-dir bench_out
 """
 import argparse
 import json
@@ -31,13 +38,13 @@ from repro.serve import Request, SamplingParams, ServeConfig, ServingEngine, \
     Scheduler
 
 
-def build_engine(args):
-    cfg = get_config(args.arch, smoke=not args.full)
-    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0), plan={}))
+def build_engine(args, cfg, params, kv_dtype):
+    budget = int(args.cache_budget_mb * 1e6) if args.cache_budget_mb else None
     scfg = ServeConfig(max_len=args.prompt_len + args.max_new,
                        temperature=args.temperature,
-                       n_slots=args.n_slots, prefill_chunk=args.chunk)
-    return cfg, ServingEngine(cfg, params, scfg)
+                       n_slots=args.n_slots, prefill_chunk=args.chunk,
+                       kv_dtype=kv_dtype, cache_budget_bytes=budget)
+    return ServingEngine(cfg, params, scfg)
 
 
 def make_workload(args, vocab):
@@ -63,28 +70,8 @@ def warmup(engine, prompts):
     sched.run(max_steps=100)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="granite-8b")
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--requests", type=int, default=10)
-    ap.add_argument("--rate", type=float, default=6.0, help="req/s (Poisson)")
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--n-slots", type=int, default=8)
-    ap.add_argument("--chunk", type=int, default=8)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--no-warmup", action="store_true")
-    args = ap.parse_args()
-
-    cfg, engine = build_engine(args)
-    print(f"== {cfg.name}: {cfg.n_layers}L d={cfg.d_model} ({cfg.family}); "
-          f"schemes proj={cfg.scheme_proj} ffn={cfg.scheme_ffn}")
-    print(f"== pool: {args.n_slots} slots x {engine.scfg.max_len} positions; "
-          f"prefill chunk {args.chunk}; {args.requests} requests @ "
-          f"~{args.rate}/s")
-
+def run_point(args, cfg, engine, kv_dtype):
+    """One sweep point: the seeded workload at one pool dtype."""
     arrivals, prompts = make_workload(args, cfg.vocab)
     if not args.no_warmup:
         t0 = time.monotonic()
@@ -92,6 +79,11 @@ def main():
         print(f"== warmup (compile) {time.monotonic() - t0:.1f}s")
 
     sched = Scheduler(engine)
+    pool = sched.pool
+    print(f"== pool[{kv_dtype}]: {pool.n_slots} slots x {pool.max_len} "
+          f"positions; {pool.bytes_per_token} B/token, "
+          f"{pool.cache_bytes / 1e6:.2f} MB cache; prefill chunk "
+          f"{args.chunk}; {args.requests} requests @ ~{args.rate}/s")
     reqs = []
     admitted_after_first_decode = 0
     i = 0
@@ -124,8 +116,65 @@ def main():
     rep["scheduler_steps"] = sched.n_steps
     rep["decode_steps"] = sched.n_decode_steps
     rep["admitted_mid_flight"] = admitted_after_first_decode
-    print("\n== serving metrics")
-    print(json.dumps(rep, indent=2))
+    rep["kv_dtype"] = kv_dtype
+    rep["n_slots"] = pool.n_slots
+    rep["kv_bytes_per_token"] = pool.bytes_per_token
+    rep["kv_cache_mb"] = round(pool.cache_bytes / 1e6, 3)
+    if args.cache_budget_mb:
+        rep["cache_budget_mb"] = args.cache_budget_mb
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--rate", type=float, default=6.0, help="req/s (Poisson)")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--n-slots", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-warmup", action="store_true")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    help="comma-separated pool dtypes to sweep: bf16,fp8,int8")
+    ap.add_argument("--cache-budget-mb", type=float, default=None,
+                    help="derive n_slots from this cache budget per dtype")
+    ap.add_argument("--out-dir", default=None,
+                    help="write one JSON per sweep point here")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=not args.full)
+    print(f"== {cfg.name}: {cfg.n_layers}L d={cfg.d_model} ({cfg.family}); "
+          f"schemes proj={cfg.scheme_proj} ffn={cfg.scheme_ffn}")
+    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0), plan={}))
+
+    reports = []
+    for kv_dtype in [d.strip() for d in args.kv_dtype.split(",") if d.strip()]:
+        engine = build_engine(args, cfg, params, kv_dtype)
+        rep = run_point(args, cfg, engine, kv_dtype)
+        print(f"\n== serving metrics [{kv_dtype}]")
+        print(json.dumps(rep, indent=2))
+        if args.out_dir:
+            os.makedirs(args.out_dir, exist_ok=True)
+            path = os.path.join(args.out_dir,
+                                f"serve_{cfg.name}_{kv_dtype}.json")
+            with open(path, "w") as f:
+                json.dump(rep, f, indent=2)
+            print(f"== wrote {path}")
+        reports.append(rep)
+
+    if len(reports) > 1:
+        print(f"\n== sweep summary ({cfg.name})")
+        print(f"{'kv_dtype':>8} {'slots':>6} {'B/tok':>6} {'tok/s':>8} "
+              f"{'ttft_p50':>9} {'occupancy':>10}")
+        for r in reports:
+            print(f"{r['kv_dtype']:>8} {r['n_slots']:>6} "
+                  f"{r['kv_bytes_per_token']:>6} {r['tokens_per_s']:>8} "
+                  f"{r.get('ttft_p50_s', float('nan')):>9} "
+                  f"{r['slot_occupancy_mean']:>10}")
 
 
 if __name__ == "__main__":

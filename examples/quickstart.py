@@ -5,8 +5,14 @@ Shows the paper's three key mechanisms on real numbers:
   2. lane packing — 2 INT4xBF16 MACs through ONE virtual-DSP multiply
   3. a quantized GEMV through the Pallas kernel vs its jnp oracle
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  python examples/quickstart.py
+(the script puts src/ on sys.path itself — no PYTHONPATH needed)
 """
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
 import numpy as np
 
 from repro.core import formats as F

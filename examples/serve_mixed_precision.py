@@ -8,7 +8,8 @@ retire as soon as they hit EOS or their token budget — freeing the slot for
 the next request.  Uses the reduced qwen3-moe config so it runs on the CPU
 container in ~a minute; pass --arch/--full to scale up.
 
-Run:  PYTHONPATH=src python examples/serve_mixed_precision.py
+Run:  python examples/serve_mixed_precision.py [--kv-dtype int8]
+(the script puts src/ on sys.path itself — no PYTHONPATH needed)
 """
 import argparse
 import os
@@ -54,6 +55,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=10)
     ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=["bf16", "int8", "fp8"],
+                    help="KV pool storage (int8/fp8: quantize-on-write)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=not args.full)
@@ -68,8 +72,12 @@ def main():
 
     engine = ServingEngine(cfg, params, ServeConfig(
         max_len=args.prompt_len + args.max_new,
-        n_slots=args.n_slots, prefill_chunk=args.chunk))
+        n_slots=args.n_slots, prefill_chunk=args.chunk,
+        kv_dtype=args.kv_dtype))
     sched = Scheduler(engine)
+    print(f"KV pool: {sched.pool.n_slots} slots x {sched.pool.max_len} "
+          f"positions @ {args.kv_dtype} = {sched.pool.bytes_per_token} "
+          f"B/token ({sched.pool.cache_bytes / 1e6:.2f} MB)")
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(1, cfg.vocab,

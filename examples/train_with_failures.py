@@ -2,10 +2,15 @@
 resume from the checkpoint, and verify the loss trajectory is bit-identical
 to an uninterrupted run (deterministic data + deterministic optimizer).
 
-Run:  PYTHONPATH=src python examples/train_with_failures.py
+Run:  python examples/train_with_failures.py
+(the script puts src/ on sys.path itself — no PYTHONPATH needed)
 """
+import os
 import shutil
+import sys
 import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.launch.train import train
 

@@ -1,0 +1,203 @@
+"""Pallas TPU flash-decode kernel: fused decode attention over the KV pool.
+
+The serving hot path is ``Sq == 1`` GQA attention over a slot-pooled cache
+(DESIGN.md §7).  The einsum path in ``models/attention.py`` dispatches a
+score einsum, a softmax and a value einsum per layer per token — and, with
+a quantized pool (DESIGN.md §9), additionally materializes a dequantized
+[B, S, H, D] copy of the cache.  This kernel fuses the whole thing:
+
+  grid (B, Hk, Sk/bk) — one program per (slot row, KV-head group, KV block)
+  * stream one packed KV block [bk, D/4] int32 + scales [bk] (or a bf16
+    block) from the pool slab into VMEM,
+  * dequantize in-kernel — arithmetic shift/mask decode with DAZ +
+    implicit-one restore (XtraMAC Stage-1 semantics; no gathers, the same
+    decode ``packed_matmul`` uses for weights),
+  * one split-KV online-softmax update (running max / normalizer / f32
+    accumulator) — the flash-decode recurrence over the block grid axis,
+  * final block normalizes and writes the [rep, D] output tile.
+
+Numerics are f32 end-to-end after the bf16 loads: strictly more accurate
+than the einsum path (which rounds scores and probabilities through bf16
+storage between dispatches).  The bit-exactness contract is therefore
+against ``kernels/ref.py:decode_attention_ref`` — the same block updates
+(shared ``_flash_update``) as a plain jnp loop — not against the einsum
+path, which agrees to bf16 rounding tolerance (DESIGN.md §9).
+
+The running (m, l) carries live in two small revisited output tiles rather
+than scratch, matching ``packed_matmul``'s revisiting-accumulate pattern
+(TPU grids iterate the last axis innermost, so all Sk blocks of one
+(B, Hk) pair run consecutively).  Validated under interpret=True on CPU;
+the TPU-target path is the same kernel compiled.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.quant.kv_cache import QuantizedKV
+from repro.quant.schemes import kv_unpack_codes
+
+from .packed_matmul import _decode_fp8_e4m3, _decode_int
+
+_NEG = -1e30  # -inf stand-in; matches models/attention.py masking
+
+
+# ---------------------------------------------------------------------------
+# Shared block math — used verbatim by the kernel body AND the jnp oracle in
+# ref.py, which is what makes interpret-mode bit-exactness a contract rather
+# than a coincidence (same ops, same order, same operands).
+# ---------------------------------------------------------------------------
+def _flash_update(m, l, acc, q, k, v, kpos, length):
+    """One online-softmax block update.
+
+    m, l [rep, 1]; acc [rep, dh]; q [rep, dh]; k, v [bk, dh] (all f32);
+    kpos [bk] absolute cache positions; length: scalar valid count.
+    """
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [rep, bk]
+    s = jnp.where(kpos[None, :] < length, s, _NEG)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+    corr = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def _block_positions(blk, bk: int):
+    """Absolute cache positions [bk] of KV block ``blk`` (2-D iota: TPU)."""
+    return blk * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)[:, 0]
+
+
+def _dequant_block(scheme_name: str, packed, scales):
+    """One KV block: packed [bk, dh/4] int32 + scales [bk] -> f32 [bk, dh].
+
+    Unpacks with the shared ``kv_unpack_codes`` codec (shift/mask only —
+    Pallas-safe), then decodes arithmetically (two's complement / E4M3 with
+    DAZ, NaN-as-zero) — identical values to the quant.schemes LUT path,
+    gather-free in-kernel.
+    """
+    codes = kv_unpack_codes(packed)
+    vals = _decode_int(codes, 8) if scheme_name == "int8" \
+        else _decode_fp8_e4m3(codes)
+    return vals * scales[:, None]
+
+
+def _prep_queries(q, hk: int):
+    """q [B, 1, H, Dh] bf16 -> prescaled f32 [B, Hk, rep, Dh] (grouped-GQA
+    layout; head h = group h//rep, repeat h%rep — as in _attend_dense)."""
+    b, sq, h, dh = q.shape
+    assert sq == 1, "decode kernel is the Sq == 1 path"
+    scale = jnp.float32(1.0 / math.sqrt(dh))
+    return (q[:, 0].astype(jnp.float32) * scale).reshape(b, hk, h // hk, dh)
+
+
+def _pick_bk(sk: int, bk=None) -> int:
+    """Largest power-of-two KV block (<= 512) dividing the slab capacity
+    (pool capacities are prefill-chunk aligned, so this is never 1 in
+    practice)."""
+    if bk is not None:
+        assert sk % bk == 0, (sk, bk)
+        return bk
+    for cand in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if sk % cand == 0:
+            return cand
+    raise AssertionError(sk)
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies (bf16 slab / packed-quantized slab)
+# ---------------------------------------------------------------------------
+def _decode_step(len_ref, q_ref, k, v, o_ref, m_ref, l_ref, bk: int):
+    blk = pl.program_id(2)
+
+    @pl.when(blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    m, l, acc = _flash_update(m_ref[0, 0], l_ref[0, 0], o_ref[0, 0],
+                              q_ref[0, 0], k, v,
+                              _block_positions(blk, bk), len_ref[0, 0])
+    m_ref[0, 0] = m
+    l_ref[0, 0] = l
+    o_ref[0, 0] = acc
+
+    @pl.when(blk == pl.num_programs(2) - 1)
+    def _normalize():
+        o_ref[...] = o_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def _decode_bf16_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                        bk: int):
+    k = k_ref[0, :, 0, :].astype(jnp.float32)        # [bk, dh]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    _decode_step(len_ref, q_ref, k, v, o_ref, m_ref, l_ref, bk)
+
+
+def _decode_quant_kernel(len_ref, q_ref, kp_ref, ks_ref, vp_ref, vs_ref,
+                         o_ref, m_ref, l_ref, *, bk: int, scheme_name: str):
+    k = _dequant_block(scheme_name, kp_ref[0, :, 0, :], ks_ref[0, :, 0])
+    v = _dequant_block(scheme_name, vp_ref[0, :, 0, :], vs_ref[0, :, 0])
+    _decode_step(len_ref, q_ref, k, v, o_ref, m_ref, l_ref, bk)
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+def gqa_decode_attention(q, k_cache, v_cache, kv_valid_len, *, bk=None,
+                         interpret: bool = True):
+    """Fused decode attention over a (possibly quantized) KV pool slab.
+
+    q [B, 1, H, Dh] bf16; k_cache/v_cache either bf16 [B, Sk, Hk, Dh] or
+    ``QuantizedKV`` (packed [B, Sk, Hk, Dh/4] int32 + scales [B, Sk, Hk]);
+    kv_valid_len [B] committed positions per slot (the just-written token
+    included).  Returns [B, 1, H, Dh] in q.dtype.
+    """
+    b, sq, h, dh = q.shape
+    quant = isinstance(k_cache, QuantizedKV)
+    if quant:
+        sk, hk = k_cache.packed.shape[1], k_cache.packed.shape[2]
+    else:
+        sk, hk = k_cache.shape[1], k_cache.shape[2]
+    rep = h // hk
+    qg = _prep_queries(q, hk)
+    bk = _pick_bk(sk, bk)
+    grid = (b, hk, sk // bk)
+    lens = jnp.asarray(kv_valid_len, jnp.int32).reshape(b, 1)
+
+    len_spec = pl.BlockSpec((1, 1), lambda bi, hi, ki: (bi, 0))
+    q_spec = pl.BlockSpec((1, 1, rep, dh), lambda bi, hi, ki: (bi, hi, 0, 0))
+    o_spec = pl.BlockSpec((1, 1, rep, dh), lambda bi, hi, ki: (bi, hi, 0, 0))
+    ml_spec = pl.BlockSpec((1, 1, rep, 1), lambda bi, hi, ki: (bi, hi, 0, 0))
+    out_shape = (jax.ShapeDtypeStruct((b, hk, rep, dh), jnp.float32),
+                 jax.ShapeDtypeStruct((b, hk, rep, 1), jnp.float32),
+                 jax.ShapeDtypeStruct((b, hk, rep, 1), jnp.float32))
+
+    if quant:
+        dw = k_cache.packed.shape[-1]
+        kv_spec = pl.BlockSpec((1, bk, 1, dw), lambda bi, hi, ki: (bi, ki, hi, 0))
+        sc_spec = pl.BlockSpec((1, bk, 1), lambda bi, hi, ki: (bi, ki, hi))
+        kernel = functools.partial(_decode_quant_kernel, bk=bk,
+                                   scheme_name=k_cache.scheme_name)
+        in_specs = [len_spec, q_spec, kv_spec, sc_spec, kv_spec, sc_spec]
+        args = (lens, qg, k_cache.packed, k_cache.scales,
+                v_cache.packed, v_cache.scales)
+    else:
+        kv_spec = pl.BlockSpec((1, bk, 1, dh), lambda bi, hi, ki: (bi, ki, hi, 0))
+        kernel = functools.partial(_decode_bf16_kernel, bk=bk)
+        in_specs = [len_spec, q_spec, kv_spec, kv_spec]
+        args = (lens, qg, k_cache, v_cache)
+
+    out, _, _ = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs,
+        out_specs=(o_spec, ml_spec, ml_spec), out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    return out.reshape(b, 1, h, dh).astype(q.dtype)

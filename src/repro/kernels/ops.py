@@ -15,6 +15,7 @@ from repro.quant.schemes import (
     QuantizedLinearWeights, quantize_activations_int8,
 )
 from . import ref
+from .decode_attention import gqa_decode_attention  # noqa: F401  (re-export)
 from .packed_matmul import packed_gemv, packed_matmul, w8a8_matmul
 from .xtramac_mac import virtual_dsp_multiply  # noqa: F401  (re-export)
 

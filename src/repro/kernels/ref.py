@@ -44,3 +44,58 @@ def w8a8_matmul_ref(x_codes, x_scale, w_codes, w_scales):
 def virtual_dsp_ref(plan: LanePlan, a_mags: np.ndarray, b_mags: np.ndarray):
     """Lane products via the exact int64 virtual-DSP packing (Eqs. 9-11)."""
     return packed_multiply(plan, np.asarray(a_mags), np.asarray(b_mags))
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_valid_len, *, bk=None):
+    """Split-KV online-softmax oracle for ``kernels/decode_attention.py``.
+
+    Runs the *same* per-block update (`_flash_update`, shared with the
+    kernel body) as a plain jnp loop over (row, KV-head, block) — so the
+    interpret-mode kernel is BIT-exact against this function on bf16 and
+    quantized KV alike (the DESIGN.md §9 equivalence contract).  Agreement
+    with the production einsum path (`models/attention.attend`) is to bf16
+    rounding tolerance only: that path rounds scores and probabilities
+    through bf16 storage between dispatches, this one stays f32 after the
+    loads.
+    """
+    from repro.quant.kv_cache import QuantizedKV
+
+    from .decode_attention import (_NEG, _block_positions, _dequant_block,
+                                   _flash_update, _pick_bk, _prep_queries)
+
+    b, _, h, dh = q.shape
+    quant = isinstance(k_cache, QuantizedKV)
+    if quant:
+        sk, hk = k_cache.packed.shape[1], k_cache.packed.shape[2]
+    else:
+        sk, hk = k_cache.shape[1], k_cache.shape[2]
+    rep = h // hk
+    qg = _prep_queries(q, hk)
+    bk = _pick_bk(sk, bk)
+    lens = jnp.asarray(kv_valid_len, jnp.int32)
+
+    rows = []
+    for bi in range(b):
+        heads = []
+        for hi in range(hk):
+            m = jnp.full((rep, 1), _NEG, jnp.float32)
+            l = jnp.zeros((rep, 1), jnp.float32)
+            acc = jnp.zeros((rep, dh), jnp.float32)
+            for blk in range(sk // bk):
+                sl = slice(blk * bk, (blk + 1) * bk)
+                if quant:
+                    k = _dequant_block(k_cache.scheme_name,
+                                       k_cache.packed[bi, sl, hi],
+                                       k_cache.scales[bi, sl, hi])
+                    v = _dequant_block(v_cache.scheme_name,
+                                       v_cache.packed[bi, sl, hi],
+                                       v_cache.scales[bi, sl, hi])
+                else:
+                    k = k_cache[bi, sl, hi].astype(jnp.float32)
+                    v = v_cache[bi, sl, hi].astype(jnp.float32)
+                m, l, acc = _flash_update(m, l, acc, qg[bi, hi], k, v,
+                                          _block_positions(blk, bk), lens[bi])
+            heads.append(acc / jnp.maximum(l, 1e-30))
+        rows.append(jnp.stack(heads))                     # [hk, rep, dh]
+    out = jnp.stack(rows)                                 # [b, hk, rep, dh]
+    return out.reshape(b, 1, h, dh).astype(q.dtype)

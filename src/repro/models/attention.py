@@ -8,11 +8,18 @@ Two execution modes, chosen by query length:
   * **Dense split-KV** (decode, Sq == 1): one einsum over the full KV length
     so the KV sequence axis can be sharded (flash-decode style); GSPMD turns
     the softmax/contraction over the sharded axis into the partial-softmax +
-    all-reduce combine pattern.
+    all-reduce combine pattern.  With ``set_use_kernel(True)`` the GQA
+    decode branch instead runs the fused Pallas flash-decode kernel
+    (``kernels/decode_attention.py``): packed KV blocks stream out of the
+    pool and dequantize in-kernel; the einsum path here is kept as the
+    interpret-mode oracle (DESIGN.md §9).
 
 Projection weights go through ``apply_linear`` and may be quantized
 (the paper's technique applies to projection MACs); the attention MACs
 themselves (QK^T, PV) stay BF16xBF16 — exactly the paper's Table I split.
+The KV *cache* may additionally be stored quantized (``kv_dtype`` = 'int8'
+/ 'fp8'): writes quantize per (position, head) group inside the jitted
+steps, reads dequantize (einsum path) or stream packed codes (kernel path).
 
 Shapes: x [B, S, D]; heads layout [B, S, H, Dh].
 """
@@ -24,7 +31,12 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .common import Maker, apply_linear, apply_rope, rms_norm, shard_act
+from repro.quant.kv_cache import (cache_read, cache_write_rows,
+                                  cache_write_slice, kv_slab_spec)
+from repro.quant.schemes import get_kv_scheme
+
+from .common import (_USE_KERNEL, Maker, apply_linear, apply_rope, rms_norm,
+                     shard_act)
 
 _NEG = -1e30  # -inf stand-in that keeps exp() NaN-free on fully-masked rows
 
@@ -217,15 +229,11 @@ def gqa_forward(params, cfg: AttnConfig, x, *, positions=None,
         if per_row:
             assert s == 1, "per-row cache_index is a decode-only path"
             rows = jnp.arange(b)
-            k_cache = k_cache.at[rows, cache_index].set(
-                k[:, 0].astype(k_cache.dtype))
-            v_cache = v_cache.at[rows, cache_index].set(
-                v[:, 0].astype(v_cache.dtype))
+            k_cache = cache_write_rows(k_cache, k, rows, cache_index)
+            v_cache = cache_write_rows(v_cache, v, rows, cache_index)
         else:
-            k_cache = jax.lax.dynamic_update_slice_in_dim(
-                k_cache, k.astype(k_cache.dtype), cache_index, axis=1)
-            v_cache = jax.lax.dynamic_update_slice_in_dim(
-                v_cache, v.astype(v_cache.dtype), cache_index, axis=1)
+            k_cache = cache_write_slice(k_cache, k, cache_index)
+            v_cache = cache_write_slice(v_cache, v, cache_index)
         new_cache = (k_cache, v_cache)
 
     if cache is None or attend_local:
@@ -235,17 +243,25 @@ def gqa_forward(params, cfg: AttnConfig, x, *, positions=None,
         k_cache, v_cache = new_cache
         valid = jnp.broadcast_to(
             jnp.asarray(cache_index + s, jnp.int32), (b,))
-        out = attend(q, k_cache, v_cache, causal=cfg.causal,
-                     q_offset=cache_index, kv_chunk=cfg.kv_chunk,
-                     kv_valid_len=valid)
+        if s == 1 and cfg.causal and _USE_KERNEL["value"]:
+            # fused flash-decode: streams (packed) KV blocks straight from
+            # the pool slab, dequantizes in-kernel, no [B,S,H,D] copy
+            from repro.kernels.decode_attention import gqa_decode_attention
+            out = gqa_decode_attention(q, k_cache, v_cache, valid)
+        else:
+            out = attend(q, cache_read(k_cache), cache_read(v_cache),
+                         causal=cfg.causal, q_offset=cache_index,
+                         kv_chunk=cfg.kv_chunk, kv_valid_len=valid)
 
     out = out.reshape(b, s, h * dh)
     return apply_linear(params["wo"], out), new_cache
 
 
 def gqa_cache_spec(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """``dtype`` is the pool knob: a jnp dtype / 'bf16' for plain slabs, or
+    a KV scheme name ('int8'/'fp8') for packed-codes + scales slabs."""
     shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
-    return (jax.ShapeDtypeStruct(shape, dtype), jax.ShapeDtypeStruct(shape, dtype))
+    return (kv_slab_spec(shape, dtype), kv_slab_spec(shape, dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -350,17 +366,11 @@ def mla_forward(params, cfg: MLAConfig, x, *, cache=None, cache_index=None,
         if per_row:
             assert s == 1, "per-row cache_index is a decode-only path"
             rows = jnp.arange(b)
-            new_cache = (
-                c_cache.at[rows, cache_index].set(
-                    c_kv[:, 0].astype(c_cache.dtype)),
-                r_cache.at[rows, cache_index].set(
-                    k_rope[:, 0].astype(r_cache.dtype)))
+            new_cache = (cache_write_rows(c_cache, c_kv, rows, cache_index),
+                         cache_write_rows(r_cache, k_rope, rows, cache_index))
         else:
-            new_cache = (
-                jax.lax.dynamic_update_slice_in_dim(
-                    c_cache, c_kv.astype(c_cache.dtype), cache_index, axis=1),
-                jax.lax.dynamic_update_slice_in_dim(
-                    r_cache, k_rope.astype(r_cache.dtype), cache_index, axis=1))
+            new_cache = (cache_write_slice(c_cache, c_kv, cache_index),
+                         cache_write_slice(r_cache, k_rope, cache_index))
         if not attend_local:   # attend over the cache (decode / chunked fill)
             c_kv, k_rope = new_cache
             valid = jnp.broadcast_to(
@@ -435,5 +445,10 @@ def _mla_decode_absorbed(params, cfg, q_nope, q_rope, c_kv, k_rope, valid, q_off
 
 
 def mla_cache_spec(cfg: MLAConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if get_kv_scheme(dtype) is not None:
+        raise ValueError(
+            f"kv_dtype={dtype!r}: KV quantization covers the GQA per-head "
+            "cache; the MLA latent cache is already compressed (kv_lora per "
+            "token) and stays bf16 — see DESIGN.md §9")
     return (jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora), dtype),
             jax.ShapeDtypeStruct((batch, max_len, cfg.d_head_rope), dtype))

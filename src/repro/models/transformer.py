@@ -534,7 +534,14 @@ def _forward_audio(cfg, params, batch, x_dec, cache, cache_index, mode):
 # ---------------------------------------------------------------------------
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
                abstract: bool = False, kv_dtype=jnp.bfloat16):
-    """Stacked per-layer cache tree (zeros, or ShapeDtypeStructs)."""
+    """Stacked per-layer cache tree (zeros, or ShapeDtypeStructs).
+
+    ``kv_dtype``: storage of the attention KV slabs — a jnp dtype / 'bf16'
+    for plain slabs, or a KV quantization scheme name ('int8' / 'fp8'), in
+    which case each slab is a ``QuantizedKV`` pytree node of packed codes +
+    per-(position, head) scales (DESIGN.md §9).  Recurrent state (ssm /
+    mamba) and the audio encoder output always stay in their native dtypes.
+    """
     def kv(stack, b=batch, s=max_len):
         if cfg.use_mla:
             spec = A.mla_cache_spec(cfg.mla_cfg(), b, s, kv_dtype)

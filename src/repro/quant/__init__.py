@@ -1,7 +1,13 @@
-"""Quantization substrate: schemes (Table I), sub-byte packing, calibration."""
+"""Quantization substrate: schemes (Table I), sub-byte packing, calibration,
+and quantized KV-cache storage (DESIGN.md §9)."""
+from .kv_cache import (  # noqa: F401
+    QuantizedKV, cache_read, cache_write_rows, cache_write_slice,
+    kv_dtype_name, kv_slab_spec,
+)
 from .pack import codes_per_word, pack_codes, pack_codes_np, unpack_codes  # noqa: F401
 from .schemes import (  # noqa: F401
-    SCHEMES, QuantScheme, QuantizedLinearWeights, decode_codes, dequant_lut,
-    dequantize, get_scheme, quantize_activations_fp8,
+    KV_SCHEMES, SCHEMES, KVQuantScheme, QuantScheme, QuantizedLinearWeights,
+    decode_codes, dequant_lut, dequantize, get_kv_scheme, get_scheme,
+    kv_dequantize, kv_quantize, quantize_activations_fp8,
     quantize_activations_int8, quantize_weights,
 )

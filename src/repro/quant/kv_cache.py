@@ -1,0 +1,117 @@
+"""Quantized KV-cache storage — the serving pool's side of the paper's
+mixed-precision plan.
+
+PR 1 quantized the *weight* operand stream; this module extends the plan to
+the KV cache (the operand stream that actually caps continuous-batching
+throughput: slots = cache bytes / bytes-per-token).  A bf16 KV slab
+``[..., S, H, D]`` becomes
+
+  packed  [..., S, H, D/4]  int32  — 4 8-bit codes per word, little-endian
+                                     (quant/pack.py's HBM-word layout,
+                                     applied along ``d_head``)
+  scales  [..., S, H]       f32    — one absmax scale per (position, head)
+                                     group (DESIGN.md §9)
+
+``QuantizedKV`` carries the pair as one pytree node (scheme name as static
+aux data), so the pool cache tree flows through ``jax.lax.scan`` layer
+stacks, ``tree_map`` slot slicing and buffer donation exactly like a plain
+array slab.  Quantize-on-write happens inside the jitted prefill/decode
+steps via ``cache_write_slice`` / ``cache_write_rows``; ``cache_read`` is
+the dequantized dense view (the einsum-oracle read path — the Pallas
+decode kernel instead streams ``packed``/``scales`` directly and
+dequantizes in-kernel, see ``kernels/decode_attention.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .schemes import get_kv_scheme, kv_dequantize, kv_quantize
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedKV:
+    """One quantized KV slab as a pytree node: children = (packed, scales),
+    static aux = scheme name — jit/scan/donation-safe (mirrors QLinear)."""
+
+    def __init__(self, packed, scales, scheme_name: str):
+        self.packed = packed
+        self.scales = scales
+        self.scheme_name = scheme_name
+
+    def tree_flatten(self):
+        return (self.packed, self.scales), (self.scheme_name,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+    def __repr__(self):
+        shape = getattr(self.packed, "shape", None)
+        return f"QuantizedKV({self.scheme_name}, packed{shape})"
+
+
+def kv_dtype_name(kv_dtype) -> str:
+    """Canonical string name of the pool dtype knob ('bf16'|'int8'|'fp8')."""
+    scheme = get_kv_scheme(kv_dtype)
+    return scheme.name if scheme is not None else "bf16"
+
+
+def kv_slab_spec(shape, kv_dtype):
+    """ShapeDtypeStruct spec(s) for one KV slab of logical ``shape``
+    [..., S, H, D] stored as ``kv_dtype`` ('bf16' / legacy jnp dtype / a
+    KV scheme name).  Quantized slabs require ``D % 4 == 0`` (packing)."""
+    scheme = get_kv_scheme(kv_dtype)
+    if scheme is None:
+        dt = kv_dtype if not isinstance(kv_dtype, str) and kv_dtype is not None \
+            else jnp.bfloat16
+        return jax.ShapeDtypeStruct(shape, dt)
+    d = shape[-1]
+    assert d % 4 == 0, f"d_head {d} not divisible by 4 (KV code packing)"
+    return QuantizedKV(
+        jax.ShapeDtypeStruct(shape[:-1] + (d // 4,), jnp.int32),
+        jax.ShapeDtypeStruct(shape[:-1], jnp.float32),
+        scheme.name,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Write / read paths (jnp; used inside the jitted engine steps)
+# ---------------------------------------------------------------------------
+def cache_write_slice(slab, vals, offset):
+    """Write ``vals`` [B, S, ...] into ``slab`` at sequence position
+    ``offset`` (axis 1) — the prefill/prefill-chunk write.  Quantized slabs
+    quantize-on-write (per-position scales make the result independent of
+    what else shares the write, so chunked and whole-prompt prefill commit
+    identical bytes)."""
+    if isinstance(slab, QuantizedKV):
+        packed, scales = kv_quantize(get_kv_scheme(slab.scheme_name), vals)
+        return QuantizedKV(
+            jax.lax.dynamic_update_slice_in_dim(slab.packed, packed, offset,
+                                                axis=1),
+            jax.lax.dynamic_update_slice_in_dim(slab.scales, scales, offset,
+                                                axis=1),
+            slab.scheme_name)
+    return jax.lax.dynamic_update_slice_in_dim(
+        slab, vals.astype(slab.dtype), offset, axis=1)
+
+
+def cache_write_rows(slab, vals, rows, offsets):
+    """Per-row scatter (decode): row i of ``vals`` [B, 1, ...] lands at
+    ``slab[i, offsets[i]]`` — every pool slot writes at its own length."""
+    if isinstance(slab, QuantizedKV):
+        packed, scales = kv_quantize(get_kv_scheme(slab.scheme_name), vals)
+        return QuantizedKV(
+            slab.packed.at[rows, offsets].set(packed[:, 0]),
+            slab.scales.at[rows, offsets].set(scales[:, 0]),
+            slab.scheme_name)
+    return slab.at[rows, offsets].set(vals[:, 0].astype(slab.dtype))
+
+
+def cache_read(slab, dtype=jnp.bfloat16):
+    """Dense view of a slab: dequantize QuantizedKV (the einsum-oracle read
+    path — one materialized [B, S, H, D] per layer), pass bf16 through."""
+    if isinstance(slab, QuantizedKV):
+        return kv_dequantize(get_kv_scheme(slab.scheme_name),
+                             slab.packed, slab.scales, dtype)
+    return slab

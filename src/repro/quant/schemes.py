@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -173,6 +174,123 @@ def dequantize(qw: QuantizedLinearWeights, dtype=jnp.bfloat16):
     g = effective_group(scheme.group_size, k)
     vals = vals.reshape(k // g, g, n) * qw.scales[:, None, :]
     return vals.reshape(k, n).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache quantization (per-head-group; the serving pool's mixed-precision
+# side — DESIGN.md §9)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class KVQuantScheme:
+    """8-bit KV-cache quantization with per-(position, head) group scales.
+
+    The scale group is one head's ``d_head`` channel vector — the finest
+    granularity that adds no inner-loop rescaling to the decode kernel
+    (scores/values for a head consume exactly one K scale and one V scale
+    per cached position).  Codes are packed 4-per-int32 word along
+    ``d_head`` (quant/pack.py's HBM-word insight applied to the cache) and
+    decode through the ``core.formats`` codec semantics: DAZ + implicit-one
+    restore, bit-identical to the XtraMAC Stage-1 mapping.
+    """
+    name: str            # 'int8' | 'fp8'
+    fmt_name: str        # backing core.formats codec
+    bits: int = 8
+
+
+KV_SCHEMES: Dict[str, KVQuantScheme] = {
+    "int8": KVQuantScheme("int8", "int8"),
+    "fp8": KVQuantScheme("fp8", "fp8_e4m3"),
+}
+
+
+def get_kv_scheme(kv_dtype) -> Optional[KVQuantScheme]:
+    """Normalize the ``kv_dtype`` knob: None for bf16 storage (including the
+    legacy jnp-dtype spelling), a ``KVQuantScheme`` for 'int8' / 'fp8'."""
+    if kv_dtype is None or not isinstance(kv_dtype, str):
+        return None                    # jnp dtype: plain (unquantized) cache
+    if kv_dtype == "bf16":
+        return None
+    try:
+        return KV_SCHEMES[kv_dtype]
+    except KeyError as exc:
+        raise KeyError(
+            f"unknown kv_dtype {kv_dtype!r}; have 'bf16' + {sorted(KV_SCHEMES)}"
+        ) from exc
+
+
+def kv_pack_codes(codes):
+    """8-bit codes [..., D] -> int32 words [..., D/4] (little-endian), jnp."""
+    d = codes.shape[-1]
+    assert d % 4 == 0, f"trailing dim {d} not divisible by 4 (KV packing)"
+    c = (codes.astype(jnp.int32) & 0xFF).reshape(codes.shape[:-1] + (d // 4, 4))
+    return c[..., 0] | (c[..., 1] << 8) | (c[..., 2] << 16) | (c[..., 3] << 24)
+
+
+def kv_unpack_codes(words):
+    """int32 words [..., Dw] -> unsigned 8-bit codes [..., Dw*4], jnp."""
+    parts = [(words >> (8 * i)) & 0xFF for i in range(4)]
+    return jnp.stack(parts, axis=-1).reshape(words.shape[:-1] + (-1,))
+
+
+def _encode_fp8_e4m3(x):
+    """jnp RN-even E4M3 encode of f32 (already clipped to max finite) ->
+    uint codes, FTZ on underflow — bit-identical to
+    ``core.formats.quantize_f64`` on this domain.  NOT the XLA float8 cast:
+    that double-rounds through f16 on CPU, flipping round-to-nearest-even
+    ties (e.g. 61.99 -> 64 instead of 60)."""
+    fmt = F.FP8_E4M3
+    xf = x.astype(jnp.float32)
+    sign = jnp.signbit(xf).astype(jnp.int32)
+    mag = jnp.abs(xf)
+    _, e2 = jnp.frexp(mag)                    # mag = frac * 2^e2, frac [.5,1)
+    e_unb = e2 - 1
+    # integer mantissa with man_bits fractional bits; the 2^k scaling is
+    # exact in f32, so jnp.round is a true RN-even on the real quotient
+    m = jnp.round(jnp.ldexp(mag, fmt.man_bits - e_unb)).astype(jnp.int32)
+    carry = m >= (1 << (fmt.man_bits + 1))
+    m = jnp.where(carry, m >> 1, m)
+    e_unb = e_unb + carry
+    underflow = (e_unb < fmt.min_unbiased_exp) | (mag == 0)
+    code = (sign << 7) | ((e_unb + fmt.bias) << fmt.man_bits) \
+        | (m & ((1 << fmt.man_bits) - 1))
+    return jnp.where(underflow, sign << 7, code)    # FTZ: signed zero
+
+
+def kv_quantize(scheme: KVQuantScheme, x):
+    """jnp (runs inside the jitted prefill/decode steps): quantize-on-write.
+
+    x [..., D] float -> (packed int32 [..., D/4], scales f32 [...]) with one
+    symmetric absmax scale per trailing-D group.  int8 is round-to-nearest
+    two's complement; fp8 is an RN-even E4M3 encode clipped to the codec's
+    max finite, bit-identical to the ``core.formats`` codec.
+    """
+    xf = x.astype(jnp.float32)
+    absmax = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-12)
+    if scheme.name == "int8":
+        scales = absmax / 127.0
+        q = jnp.clip(jnp.round(xf / scales[..., None]), -128, 127)
+        codes = q.astype(jnp.int32)
+    else:                                   # fp8_e4m3
+        fmt = F.FP8_E4M3
+        scales = absmax / jnp.float32(fmt.max_finite)
+        scaled = jnp.clip(xf / scales[..., None],
+                          -fmt.max_finite, fmt.max_finite)
+        codes = _encode_fp8_e4m3(scaled)
+    return kv_pack_codes(codes), scales
+
+
+def kv_decode_codes(scheme: KVQuantScheme, codes):
+    """jnp: unsigned 8-bit codes -> f32 pre-scale values (codec semantics:
+    two's complement for int8, DAZ LUT for fp8 — NaN/subnormals read as 0)."""
+    if scheme.name == "int8":
+        return _int_decode(codes, 8).astype(jnp.float32)
+    return jnp.asarray(FP8_LUT)[codes]
+
+
+def kv_dequantize(scheme: KVQuantScheme, packed, scales, dtype=jnp.bfloat16):
+    """jnp: packed words + group scales -> dense KV slab [..., D]."""
+    codes = kv_unpack_codes(packed)
+    return (kv_decode_codes(scheme, codes) * scales[..., None]).astype(dtype)
 
 
 def quantize_activations_int8(x):

@@ -1,5 +1,5 @@
 from .engine import SCHEDULABLE_FAMILIES, ServeConfig, ServingEngine
-from .kv_pool import KVCachePool
+from .kv_pool import KVCachePool, bytes_per_slot, slots_for_budget
 from .metrics import ServeMetrics
 from .request import Request, RequestState, SamplingParams
 from .scheduler import Scheduler
@@ -7,5 +7,5 @@ from .scheduler import Scheduler
 __all__ = [
     "KVCachePool", "Request", "RequestState", "SamplingParams",
     "SCHEDULABLE_FAMILIES", "Scheduler", "ServeConfig", "ServeMetrics",
-    "ServingEngine",
+    "ServingEngine", "bytes_per_slot", "slots_for_budget",
 ]

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +41,7 @@ import numpy as np
 
 from repro.models import transformer as T
 
-from .kv_pool import KVCachePool, POOLABLE_FAMILIES
+from .kv_pool import KVCachePool, POOLABLE_FAMILIES, slots_for_budget
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,9 +49,16 @@ class ServeConfig:
     max_len: int = 512        # per-slot KV capacity (prompt + new tokens)
     temperature: float = 0.0
     eos_id: int = -1          # -1: never stop early
-    kv_dtype: jnp.dtype = jnp.bfloat16
+    # pool storage dtype: 'bf16' (or a jnp dtype) for plain slabs, 'int8' /
+    # 'fp8' for quantized packed-codes + scales slabs (DESIGN.md §9) —
+    # quantize-on-write happens inside the jitted prefill/decode steps
+    kv_dtype: Any = "bf16"
     n_slots: int = 8          # KV pool width = decode batch (static shape)
     prefill_chunk: int = 16   # chunked-prefill granularity (static shape)
+    # optional cache-memory budget: when set, ``new_pool()`` derives the
+    # slot count from KV bytes/token instead of taking ``n_slots`` —
+    # the knob that turns cache quantization into served concurrency
+    cache_budget_bytes: Optional[int] = None
 
 
 # Families served through the slot pool / scheduler; VLM is poolable but its
@@ -122,8 +129,19 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def new_pool(self, n_slots: Optional[int] = None,
                  max_len: Optional[int] = None) -> KVCachePool:
-        return KVCachePool(self.cfg, n_slots or self.scfg.n_slots,
-                           max_len or self.scfg.max_len,
+        """Build the slot pool.  With ``cache_budget_bytes`` set, the slot
+        count is derived from KV bytes/token at ``kv_dtype`` — an int8/fp8
+        pool fits ~2x the slots of bf16 in the same budget."""
+        max_len = max_len or self.scfg.max_len
+        if n_slots is None:
+            if self.scfg.cache_budget_bytes is not None:
+                n_slots = slots_for_budget(
+                    self.cfg, max_len, self.scfg.cache_budget_bytes,
+                    kv_dtype=self.scfg.kv_dtype,
+                    align=self.scfg.prefill_chunk)
+            else:
+                n_slots = self.scfg.n_slots
+        return KVCachePool(self.cfg, n_slots, max_len,
                            kv_dtype=self.scfg.kv_dtype,
                            align=self.scfg.prefill_chunk)
 

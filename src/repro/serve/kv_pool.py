@@ -21,21 +21,57 @@ explicit per-row valid length the scheduler passes to the model
 attended; the next tenant's prefill overwrites positions [0, P) before any
 read of them.  ``lengths[slot]`` is the single source of truth for how many
 positions of a slot are committed.
+
+**Capacity is a function of KV bytes per token** (DESIGN.md §9): the pool
+dtype knob (``kv_dtype`` = 'bf16' | 'int8' | 'fp8') sets how many bytes one
+cached position costs, and ``slots_for_budget`` turns a cache-memory budget
+into a slot count — quantizing the cache is how the same budget serves
+roughly twice the concurrent requests.
 """
 from __future__ import annotations
 
 import heapq
 from typing import List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
+from repro.quant.kv_cache import kv_dtype_name
 
 # Families whose cache tree is stacked per-layer KV slabs with a batch
 # (= slot) axis at position 1.  SSM/hybrid state pools would be a different
 # (cheaper) layout; audio additionally caches the encoder output.
 POOLABLE_FAMILIES = ("dense", "moe", "vlm")
+
+
+def _spec_bytes(tree) -> int:
+    """Total bytes of a cache tree (arrays or ShapeDtypeStructs)."""
+    return sum(int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def bytes_per_slot(cfg: T.ModelConfig, max_len: int, *, kv_dtype="bf16",
+                   align: int = 1) -> int:
+    """Allocated cache bytes one pool slot costs (all layers, K+V, scales
+    included for quantized dtypes; computed from the abstract cache spec so
+    it can never drift from what ``init_cache`` actually allocates)."""
+    capacity = -(-max_len // align) * align
+    spec = T.init_cache(cfg, 1, capacity, abstract=True, kv_dtype=kv_dtype)
+    return _spec_bytes(spec)
+
+
+def slots_for_budget(cfg: T.ModelConfig, max_len: int, budget_bytes: int, *,
+                     kv_dtype="bf16", align: int = 1) -> int:
+    """How many ``max_len`` slots fit a cache-memory budget at ``kv_dtype``."""
+    per = bytes_per_slot(cfg, max_len, kv_dtype=kv_dtype, align=align)
+    n = int(budget_bytes) // per
+    if n < 1:
+        raise ValueError(
+            f"cache budget {budget_bytes} B < one {max_len}-position slot "
+            f"({per} B at kv_dtype={kv_dtype_name(kv_dtype)!r})")
+    return n
 
 
 class KVCachePool:
@@ -58,11 +94,23 @@ class KVCachePool:
         self.n_slots = n_slots
         self.max_len = max_len                            # logical capacity
         self.capacity = -(-max_len // align) * align      # allocated positions
+        self.kv_dtype = kv_dtype_name(kv_dtype)
         self.cache = T.init_cache(cfg, n_slots, self.capacity,
                                   kv_dtype=kv_dtype)
         self.lengths = np.zeros((n_slots,), np.int32)   # committed positions
         self._free: List[int] = list(range(n_slots))    # min-heap of slot ids
         heapq.heapify(self._free)
+
+    # -- memory accounting -------------------------------------------------
+    @property
+    def cache_bytes(self) -> int:
+        """Allocated bytes of the whole cache tree (codes + scales)."""
+        return _spec_bytes(self.cache)
+
+    @property
+    def bytes_per_token(self) -> int:
+        """Cache bytes one committed position costs across all layers."""
+        return self.cache_bytes // (self.n_slots * self.capacity)
 
     # -- allocation --------------------------------------------------------
     @property

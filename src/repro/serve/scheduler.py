@@ -20,6 +20,14 @@ immediately, so the next ``step()`` can admit a waiting request into it —
 finished rows never burn decode steps, which is precisely what the old
 static-batch ``generate()`` got wrong.
 
+Concurrency is capped by the pool, and the pool is capped by KV bytes per
+token: with a quantized pool (``ServeConfig.kv_dtype`` = 'int8'/'fp8' and a
+``cache_budget_bytes``) the same cache memory admits roughly twice the
+slots, which is the whole point of extending the mixed-precision plan to
+the KV side (DESIGN.md §9).  The scheduler itself is storage-agnostic — it
+sees alloc/free/lengths, and quantization is per (position, head), so a
+request's committed cache bytes never depend on what shared its batches.
+
 Determinism: sampling keys are per (request, step) — see request.py — and
 row computations are independent of batch composition (dense ops are
 row-wise; MoE decode routes each row as its own drop-free single-token
@@ -112,6 +120,12 @@ class Scheduler:
     @property
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        """Cache bytes one committed position costs (pool storage dtype
+        included) — the denominator of the slots-per-budget trade."""
+        return self.pool.bytes_per_token
 
     # ------------------------------------------------------------------
     def step(self) -> Dict[str, List]:

@@ -1,0 +1,248 @@
+"""KV-cache quantization + fused decode-attention kernel tests.
+
+Pins the DESIGN.md §9 contracts:
+  * per-scheme round-trip error bounds (int8 half-step, fp8 half-ulp + DAZ),
+  * jnp quantize path decodes identically to the core.formats codecs,
+  * the Pallas flash-decode kernel (interpret mode) is BIT-exact against
+    its split-KV online-softmax oracle on bf16 AND quantized KV,
+  * the kernel agrees with the production einsum path to bf16 rounding,
+  * end-to-end decode logits with the kernel toggled on match the einsum
+    path (argmax included) for one step after a real chunked prefill.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import formats as F
+from repro.kernels.decode_attention import gqa_decode_attention
+from repro.kernels.ref import decode_attention_ref
+from repro.models import transformer as T
+from repro.models.attention import attend
+from repro.models.common import InitMaker, set_use_kernel
+from repro.quant.kv_cache import (QuantizedKV, cache_read, cache_write_rows,
+                                  cache_write_slice, kv_slab_spec)
+from repro.quant.schemes import (KV_SCHEMES, get_kv_scheme, kv_dequantize,
+                                 kv_pack_codes, kv_quantize, kv_unpack_codes)
+
+RNG = np.random.default_rng(17)
+
+
+def _kv_data(b=3, s=48, hk=2, dh=16, spread=True):
+    x = RNG.normal(size=(b, s, hk, dh))
+    if spread:  # per-(position, head) magnitude spread: exercises the scales
+        x *= np.exp(RNG.normal(size=(b, s, hk, 1)))
+    return x.astype(np.float32)
+
+
+def _quantized(name, x):
+    packed, scales = kv_quantize(get_kv_scheme(name), jnp.asarray(x))
+    return QuantizedKV(packed, scales, name)
+
+
+# ---------------------------------------------------------------------------
+# Round-trip error bounds per scheme
+# ---------------------------------------------------------------------------
+def test_pack_unpack_roundtrip_exact():
+    codes = RNG.integers(0, 256, (5, 7, 2, 16))
+    got = np.asarray(kv_unpack_codes(kv_pack_codes(jnp.asarray(codes))))
+    np.testing.assert_array_equal(got, codes)
+
+
+def test_int8_roundtrip_half_step_bound():
+    """Symmetric int8: |err| <= scale/2 everywhere, scale = absmax/127 per
+    (position, head) group."""
+    x = _kv_data()
+    scheme = get_kv_scheme("int8")
+    packed, scales = kv_quantize(scheme, jnp.asarray(x))
+    dq = np.asarray(kv_dequantize(scheme, packed, scales, jnp.float32))
+    sc = np.asarray(scales)[..., None]
+    assert (np.abs(dq - x) <= sc / 2 + 1e-6).all()
+    # group extremes are exactly representable (they define the scale)
+    flat_max = np.abs(x).max(-1)
+    got_max = np.abs(dq).max(-1)
+    np.testing.assert_allclose(got_max, flat_max, rtol=1e-5)
+
+
+def test_fp8_roundtrip_half_ulp_bound():
+    """E4M3: relative error <= 2^-4 (half-ulp of a 3-bit mantissa) for
+    normal values; values in the subnormal band flush to zero under DAZ
+    (abs err <= 2^-6 * scale)."""
+    x = _kv_data()
+    scheme = get_kv_scheme("fp8")
+    packed, scales = kv_quantize(scheme, jnp.asarray(x))
+    dq = np.asarray(kv_dequantize(scheme, packed, scales, jnp.float32))
+    sc = np.asarray(scales)[..., None]
+    bound = np.maximum(np.abs(x) * 2.0 ** -4, sc * 2.0 ** -6) + 1e-7
+    assert (np.abs(dq - x) <= bound).all()
+
+
+def test_fp8_jnp_quantize_matches_formats_codec():
+    """The in-jit E4M3 encode emits bit-identical CODES to the numpy
+    core.formats codec (RN-even + FTZ — the Stage-1 mapping semantics; the
+    naive XLA float8 cast would fail this on round-to-even ties, which is
+    why kv_quantize encodes arithmetically)."""
+    x = _kv_data(b=2, s=16)
+    scheme = get_kv_scheme("fp8")
+    packed, scales = kv_quantize(scheme, jnp.asarray(x))
+    codes_jnp = np.asarray(kv_unpack_codes(packed))
+    scaled = x / np.asarray(scales)[..., None]
+    codes_np = F.quantize_f64(F.FP8_E4M3, scaled.astype(np.float64))
+    np.testing.assert_array_equal(codes_jnp, codes_np)
+
+
+def test_kv_scheme_registry():
+    assert sorted(KV_SCHEMES) == ["fp8", "int8"]
+    assert get_kv_scheme("bf16") is None
+    assert get_kv_scheme(jnp.bfloat16) is None
+    assert get_kv_scheme(None) is None
+    with pytest.raises(KeyError):
+        get_kv_scheme("int4")
+
+
+# ---------------------------------------------------------------------------
+# Cache slab layout + write/read paths
+# ---------------------------------------------------------------------------
+def test_quantized_slab_spec_shapes():
+    spec = kv_slab_spec((4, 32, 2, 16), "int8")
+    assert isinstance(spec, QuantizedKV)
+    assert spec.packed.shape == (4, 32, 2, 4) and spec.packed.dtype == jnp.int32
+    assert spec.scales.shape == (4, 32, 2) and spec.scales.dtype == jnp.float32
+    plain = kv_slab_spec((4, 32, 2, 16), "bf16")
+    assert plain.shape == (4, 32, 2, 16) and plain.dtype == jnp.bfloat16
+
+
+def test_cache_write_slice_and_rows_roundtrip():
+    """Chunked writes + per-row scatters commit exactly the bytes a direct
+    quantize of the same values would — batch/chunk composition cannot
+    change a position's stored codes."""
+    x = jnp.asarray(_kv_data(b=2, s=16), jnp.bfloat16)
+    scheme = get_kv_scheme("int8")
+    slab = jax.tree_util.tree_map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                                  kv_slab_spec((2, 24, 2, 16), "int8"))
+    slab = cache_write_slice(slab, x[:, :8], 0)          # chunk 1
+    slab = cache_write_slice(slab, x[:, 8:15], 8)        # chunk 2 (odd len)
+    rows = jnp.arange(2)
+    slab = cache_write_rows(slab, x[:, 15:16], rows,
+                            jnp.asarray([15, 15]))       # decode write
+    want_p, want_s = kv_quantize(scheme, x)
+    np.testing.assert_array_equal(np.asarray(slab.packed[:, :16]),
+                                  np.asarray(want_p))
+    np.testing.assert_array_equal(np.asarray(slab.scales[:, :16]),
+                                  np.asarray(want_s))
+    dense = cache_read(slab, jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(dense[:, :16]),
+        np.asarray(kv_dequantize(scheme, want_p, want_s, jnp.float32)))
+
+
+def test_init_cache_quantized_leaves_and_mla_guard():
+    cfg = get_config("granite-8b", smoke=True)
+    cache = T.init_cache(cfg, 4, 16, kv_dtype="int8")
+    k_slab, v_slab = cache
+    assert isinstance(k_slab, QuantizedKV) and isinstance(v_slab, QuantizedKV)
+    assert k_slab.packed.shape == (cfg.n_layers, 4, 16, cfg.n_kv_heads,
+                                   cfg.d_head // 4)
+    assert k_slab.scales.shape == (cfg.n_layers, 4, 16, cfg.n_kv_heads)
+    # MLA latent caches stay bf16 — quantized kv_dtype is rejected loudly
+    mla = get_config("deepseek-v2-236b", smoke=True)
+    with pytest.raises(ValueError):
+        T.init_cache(mla, 2, 16, kv_dtype="int8")
+
+
+# ---------------------------------------------------------------------------
+# Pallas decode kernel: bit-exact vs oracle; einsum-path agreement
+# ---------------------------------------------------------------------------
+def _attn_inputs(b=3, sk=48, hk=2, rep=2, dh=16):
+    h = hk * rep
+    q = jnp.asarray(RNG.normal(size=(b, 1, h, dh)), jnp.bfloat16)
+    k = jnp.asarray(_kv_data(b, sk, hk, dh), jnp.bfloat16)
+    v = jnp.asarray(_kv_data(b, sk, hk, dh), jnp.bfloat16)
+    lens = jnp.asarray([1, sk // 2 + 1, sk], jnp.int32)[:b]
+    return q, k, v, lens
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8", "fp8"])
+def test_decode_kernel_bitexact_vs_oracle(kv_dtype):
+    """Interpret-mode kernel == split-KV online-softmax oracle, bit for bit
+    (shared block update; the §9 equivalence contract) — including ragged
+    valid lengths and blocks entirely past a row's length."""
+    q, k, v, lens = _attn_inputs()
+    if kv_dtype != "bf16":
+        k, v = _quantized(kv_dtype, k), _quantized(kv_dtype, v)
+    got = gqa_decode_attention(q, k, v, lens, interpret=True)
+    want = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+def test_decode_kernel_block_size_invariant():
+    """Same result for any KV block size (split points move, math doesn't)."""
+    q, k, v, lens = _attn_inputs()
+    outs = [np.asarray(gqa_decode_attention(q, k, v, lens, bk=bk,
+                                            interpret=True), np.float32)
+            for bk in (8, 16, 48)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-6, atol=1e-6)
+
+
+def test_decode_kernel_matches_einsum_path_bf16():
+    """Kernel vs the production einsum path (`attend`): agreement to bf16
+    rounding — the einsum path stages scores/probabilities through bf16
+    storage, the fused kernel stays f32 after the loads (DESIGN.md §9)."""
+    q, k, v, lens = _attn_inputs()
+    want = attend(q, k, v, causal=True, q_offset=lens - 1, kv_valid_len=lens)
+    got = gqa_decode_attention(q, k, v, lens, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_decode_kernel_quantized_within_documented_bounds(kv_dtype):
+    """Quantized-cache attention vs full-precision attention over the same
+    values: outputs are convex combinations of V rows, so the error is
+    bounded by the per-element dequant error (§9 bounds) plus softmax
+    shift from the perturbed scores — loose envelope asserted here."""
+    q, k, v, lens = _attn_inputs()
+    want = attend(q, k, v, causal=True, q_offset=lens - 1, kv_valid_len=lens)
+    got = gqa_decode_attention(q, _quantized(kv_dtype, k),
+                               _quantized(kv_dtype, v), lens, interpret=True)
+    atol = 0.08 if kv_dtype == "int8" else 0.35   # ~half-step vs half-ulp
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_engine_decode_logits_kernel_vs_einsum(kv_dtype):
+    """End-to-end through the jitted engine steps: chunked prefill + one
+    decode step with the kernel toggled on produces the same argmax and
+    bf16-close logits as the einsum path."""
+    cfg = get_config("granite-8b", smoke=True)
+    params = T.build_params(cfg, InitMaker(jax.random.PRNGKey(0)))
+    from repro.serve import ServeConfig, ServingEngine
+    prompts = [RNG.integers(1, cfg.vocab, (n,)).astype(np.int32)
+               for n in (11, 8, 5)]
+
+    def decode_once(use_kernel):
+        set_use_kernel(use_kernel)
+        try:
+            eng = ServingEngine(cfg, params, ServeConfig(
+                max_len=32, n_slots=4, prefill_chunk=8, kv_dtype=kv_dtype))
+            pool = eng.new_pool()
+            slots = [pool.alloc() for _ in prompts]
+            last = eng.prefill_into_slots(pool, slots, prompts)
+            toks = np.zeros((pool.n_slots,), np.int32)
+            for s, l in zip(slots, last):
+                toks[s] = int(np.argmax(np.asarray(l)))
+            return np.asarray(eng.decode_slots(pool, toks),
+                              np.float32)[:len(prompts)], toks
+        finally:
+            set_use_kernel(False)
+
+    logits_e, first_e = decode_once(False)
+    logits_k, first_k = decode_once(True)
+    np.testing.assert_array_equal(first_e, first_k)
+    np.testing.assert_allclose(logits_k, logits_e, rtol=5e-2, atol=5e-2)
+    np.testing.assert_array_equal(logits_k.argmax(-1), logits_e.argmax(-1))

@@ -206,6 +206,78 @@ def test_unaligned_max_len_pads_capacity(engine):
     assert out["generated"].shape == (2, 4)
 
 
+@pytest.fixture(scope="module")
+def engine_int8(engine):
+    """Same weights, int8-quantized KV pool (DESIGN.md §9)."""
+    return ServingEngine(engine.cfg, engine.params, ServeConfig(
+        max_len=48, n_slots=4, prefill_chunk=8, kv_dtype="int8"))
+
+
+def test_scheduler_one_shot_equivalence_with_quantized_kv(engine_int8):
+    """The one-shot-equivalence harness holds with kv_dtype='int8': greedy
+    continuous-batching output == one-shot generate(), token for token
+    (quantization is per (position, head), so committed cache bytes are
+    independent of chunking and batch composition)."""
+    prompts = _prompts(engine_int8, 3, [8, 11, 6], seed=12)
+    one_shot = [engine_int8.generate({"tokens": p[None]}, max_new_tokens=6)
+                ["generated"][0] for p in prompts]
+
+    sched = Scheduler(engine_int8)
+    reqs = [sched.submit(Request(prompt=p,
+                                 sampling=SamplingParams(max_new_tokens=6)))
+            for p in prompts]
+    # admit the last request only after decode started (mid-flight path)
+    while sched.n_decode_steps < 2:
+        sched.step()
+    late = sched.submit(Request(prompt=prompts[2][:5],
+                                sampling=SamplingParams(max_new_tokens=6)))
+    solo_late = engine_int8.generate({"tokens": prompts[2][None, :5]},
+                                     max_new_tokens=6)["generated"][0]
+    sched.run(max_steps=300)
+    for req, want in zip(reqs, one_shot):
+        np.testing.assert_array_equal(np.asarray(req.output_tokens), want)
+    np.testing.assert_array_equal(np.asarray(late.output_tokens), solo_late)
+
+
+def test_quantized_pool_bytes_and_budget_slots(engine, engine_int8):
+    """Slot capacity is a function of KV bytes/token: at a fixed cache
+    budget the int8 pool fits more slots than bf16 (~2x at production head
+    dims; the f32 scales overhead is proportionally larger at the smoke
+    model's d_head=16)."""
+    from repro.serve import bytes_per_slot, slots_for_budget
+    cfg = engine.cfg
+    pool_bf16, pool_int8 = engine.new_pool(), engine_int8.new_pool()
+    # bf16: 2 slabs * L * Hk * Dh * 2 B; int8: codes 1 B + f32 scale / head
+    L, hk, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    assert pool_bf16.bytes_per_token == 2 * L * hk * dh * 2
+    assert pool_int8.bytes_per_token == 2 * L * hk * (dh + 4)
+    budget = 64 * pool_bf16.bytes_per_token * pool_bf16.capacity
+    n_bf16 = slots_for_budget(cfg, 48, budget, kv_dtype="bf16", align=8)
+    n_int8 = slots_for_budget(cfg, 48, budget, kv_dtype="int8", align=8)
+    assert n_bf16 == 64
+    assert n_int8 > n_bf16
+    assert bytes_per_slot(cfg, 48, kv_dtype="int8", align=8) \
+        == pool_int8.bytes_per_token * pool_int8.capacity
+    with pytest.raises(ValueError):
+        slots_for_budget(cfg, 48, 10, kv_dtype="int8", align=8)
+
+
+def test_budget_derived_pool_through_engine(engine):
+    """ServeConfig.cache_budget_bytes drives new_pool(): same budget, more
+    int8 slots; the scheduler runs against the derived pool unchanged."""
+    cfg, params = engine.cfg, engine.params
+    budget = 8 * 48 * 2 * cfg.n_layers * cfg.n_kv_heads * cfg.d_head * 2
+    eng = ServingEngine(cfg, params, ServeConfig(
+        max_len=48, prefill_chunk=8, kv_dtype="int8",
+        cache_budget_bytes=budget))
+    pool = eng.new_pool()
+    assert pool.kv_dtype == "int8"
+    assert pool.n_slots > 8                     # bf16 would fit exactly 8
+    assert pool.n_slots * pool.capacity * pool.bytes_per_token <= budget
+    sched = Scheduler(eng, pool=pool)
+    assert sched.kv_bytes_per_token == pool.bytes_per_token
+
+
 def test_kv_pool_alloc_free():
     cfg = get_config("granite-8b", smoke=True)
     pool = KVCachePool(cfg, n_slots=3, max_len=16)
