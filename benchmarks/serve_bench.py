@@ -19,6 +19,9 @@ Smoke (CPU, ~1 min incl. compile):
 Quantized-cache sweep at a fixed budget:
     python benchmarks/serve_bench.py --kv-dtype bf16,fp8,int8 \
         --cache-budget-mb 2 --out-dir bench_out
+Sharded sweep on forced host devices (DESIGN.md §10):
+    python benchmarks/serve_bench.py --dp 2 --tp 4 --force-host-devices 8 \
+        --kv-dtype int8 --out-dir bench_out
 """
 import argparse
 import json
@@ -28,22 +31,22 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
+# NOTE: jax (and repro modules, which import it) are imported inside main()
+# so --force-host-devices can set XLA_FLAGS before backend initialization
+# (repro.launch.cli is deliberately jax-free at module level).
 import numpy as np
 
-from repro.configs import get_config
-from repro.models.common import QuantMaker
-from repro.models import transformer as T
-from repro.serve import Request, SamplingParams, ServeConfig, ServingEngine, \
-    Scheduler
+from repro.launch.cli import force_host_devices, serving_mesh
 
 
-def build_engine(args, cfg, params, kv_dtype):
+def build_engine(args, cfg, params, kv_dtype, mesh):
+    from repro.serve import ServeConfig, ServingEngine
     budget = int(args.cache_budget_mb * 1e6) if args.cache_budget_mb else None
     scfg = ServeConfig(max_len=args.prompt_len + args.max_new,
                        temperature=args.temperature,
                        n_slots=args.n_slots, prefill_chunk=args.chunk,
-                       kv_dtype=kv_dtype, cache_budget_bytes=budget)
+                       kv_dtype=kv_dtype, cache_budget_bytes=budget,
+                       mesh=mesh)
     return ServingEngine(cfg, params, scfg)
 
 
@@ -62,6 +65,7 @@ def make_workload(args, vocab):
 def warmup(engine, prompts):
     """Compile the chunk/decode/sample steps off the clock so the first
     request's TTFT measures scheduling, not XLA."""
+    from repro.serve import Request, SamplingParams, Scheduler
     sched = Scheduler(engine)
     sched.submit(Request(prompt=prompts[0],
                          sampling=SamplingParams(
@@ -72,6 +76,7 @@ def warmup(engine, prompts):
 
 def run_point(args, cfg, engine, kv_dtype):
     """One sweep point: the seeded workload at one pool dtype."""
+    from repro.serve import Request, SamplingParams, Scheduler
     arrivals, prompts = make_workload(args, cfg.vocab)
     if not args.no_warmup:
         t0 = time.monotonic()
@@ -144,16 +149,31 @@ def main():
                     help="derive n_slots from this cache budget per dtype")
     ap.add_argument("--out-dir", default=None,
                     help="write one JSON per sweep point here")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel mesh axis (pool slots shard here)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="model-parallel mesh axis (weights/heads)")
+    ap.add_argument("--force-host-devices", type=int, default=0,
+                    help="CPU validation: fake this many host devices")
     args = ap.parse_args()
+
+    force_host_devices(args.force_host_devices)
+    import jax
+    from repro.configs import get_config
+    from repro.models.common import QuantMaker
+    from repro.models import transformer as T
+
+    mesh = serving_mesh(args.dp, args.tp)
 
     cfg = get_config(args.arch, smoke=not args.full)
     print(f"== {cfg.name}: {cfg.n_layers}L d={cfg.d_model} ({cfg.family}); "
-          f"schemes proj={cfg.scheme_proj} ffn={cfg.scheme_ffn}")
-    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0), plan={}))
+          f"schemes proj={cfg.scheme_proj} ffn={cfg.scheme_ffn}"
+          + (f"; mesh dp={args.dp} x tp={args.tp}" if mesh is not None else ""))
+    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0)))
 
     reports = []
     for kv_dtype in [d.strip() for d in args.kv_dtype.split(",") if d.strip()]:
-        engine = build_engine(args, cfg, params, kv_dtype)
+        engine = build_engine(args, cfg, params, kv_dtype, mesh)
         rep = run_point(args, cfg, engine, kv_dtype)
         print(f"\n== serving metrics [{kv_dtype}]")
         print(json.dumps(rep, indent=2))

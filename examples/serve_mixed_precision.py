@@ -64,7 +64,7 @@ def main():
     print(f"== {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
           f"({cfg.family}); schemes proj={cfg.scheme_proj} "
           f"ffn={cfg.scheme_ffn}")
-    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0), plan={}))
+    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0)))
 
     pb, de = checkpoint_bytes(params)
     print(f"checkpoint bytes: {pb/1e6:.2f} MB packed "

@@ -9,6 +9,8 @@ TPU-target fast path validated under interpret=True.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax.numpy as jnp
 
 from repro.quant.schemes import (
@@ -18,6 +20,41 @@ from . import ref
 from .decode_attention import gqa_decode_attention  # noqa: F401  (re-export)
 from .packed_matmul import packed_gemv, packed_matmul, w8a8_matmul
 from .xtramac_mac import virtual_dsp_multiply  # noqa: F401  (re-export)
+
+
+# ---------------------------------------------------------------------------
+# Partitioning guard.  The Pallas kernels index global array shapes and are
+# not GSPMD-partitionable: traced under a multi-device mesh they would be
+# replicated per shard against shard-local views — wrong shapes, wrong
+# results.  Drivers that trace steps under a mesh (serve engine,
+# launch/steps cells) declare it here, and ``kernel_allowed`` downgrades
+# ``use_kernel=True`` to the mathematically-identical jnp path with a loud
+# warning instead of a silent wrong answer (DESIGN.md §10).  Packed weights
+# stream either way, so the roofline memory term is unchanged.
+# ---------------------------------------------------------------------------
+_PARTITIONED = {"value": False}
+
+
+def set_under_partitioning(flag: bool) -> None:
+    """Declare that model steps are (or are no longer) traced under a
+    multi-device mesh.  Global, like ``set_use_kernel`` — the two toggles
+    compose via ``kernel_allowed``."""
+    _PARTITIONED["value"] = bool(flag)
+
+
+def under_partitioning() -> bool:
+    return _PARTITIONED["value"]
+
+
+def kernel_allowed(use_kernel: bool) -> bool:
+    """``use_kernel``, downgraded (loudly) when partitioning is active."""
+    if use_kernel and _PARTITIONED["value"]:
+        warnings.warn(
+            "use_kernel=True under mesh partitioning: Pallas kernels are "
+            "not GSPMD-partitionable; falling back to the jnp reference "
+            "path (same math, packed weights either way)", stacklevel=3)
+        return False
+    return use_kernel
 
 
 def quantized_matmul(x, qw: QuantizedLinearWeights, *, use_kernel: bool = False,
@@ -30,6 +67,7 @@ def quantized_matmul(x, qw: QuantizedLinearWeights, *, use_kernel: bool = False,
       w8a8             : INT8 x INT8 -> INT32 (activations quantized here)
       bf16             : dense bf16 matmul (attention-path MACs)
     """
+    use_kernel = kernel_allowed(use_kernel)
     scheme = qw.scheme
     lead = x.shape[:-1]
     k = x.shape[-1]

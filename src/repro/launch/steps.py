@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.shapes import ShapeSpec, input_specs
+from repro.kernels.ops import set_under_partitioning
 from repro.models.common import AbstractMaker, set_activation_shardings
 from repro.models import transformer as T
 from repro.optim import AdamWConfig, adamw_init, adamw_update
@@ -22,6 +23,22 @@ from repro.runtime import partitioning as PT
 
 def abstract_params(cfg: T.ModelConfig, *, quantize: bool):
     return T.build_params(cfg, AbstractMaker(quantize=quantize))
+
+
+def _declare_on_trace(fn, mesh: Mesh):
+    """Sync the global kernel guard (kernels/ops.py) to ``mesh`` at TRACE
+    time: the set call runs as a host side effect while ``fn``'s body is
+    traced — exactly when the kernel-vs-jnp decision is baked in — so an
+    interleaved engine/cell built against a different mesh cannot flip the
+    flag between cell construction and first trace."""
+    import functools
+    partitioned = mesh.size > 1
+
+    @functools.wraps(fn)
+    def wrapped(*args):
+        set_under_partitioning(partitioned)
+        return fn(*args)
+    return wrapped
 
 
 def _named(mesh, tree):
@@ -143,7 +160,12 @@ def train_cell(cfg: T.ModelConfig, shape: ShapeSpec, mesh: Mesh,
 
     _activation_rules(cfg, mesh, rules, shape.global_batch, shape.seq_len,
                       "train")
-    fn = make_train_step(cfg, optim_cfg, grad_shardings=_named(mesh, pspec))
+    # Pallas kernels are not GSPMD-partitionable: the wrapper declares the
+    # mesh at trace time so use_kernel=True downgrades loudly to the jnp
+    # path (kernels/ops.py)
+    fn = _declare_on_trace(
+        make_train_step(cfg, optim_cfg, grad_shardings=_named(mesh, pspec)),
+        mesh)
     in_sh = ( _named(mesh, pspec), _named(mesh, opt_spec), _named(mesh, bspec))
     out_sh = (_named(mesh, pspec), _named(mesh, opt_spec), None)
     return fn, (params, opt_state, batch), in_sh, out_sh, (0, 1)
@@ -184,12 +206,12 @@ def serve_cell(cfg: T.ModelConfig, shape: ShapeSpec, mesh: Mesh):
                       shape.kind)
 
     if shape.kind == "prefill":
-        fn = make_prefill_step(cfg)
+        fn = _declare_on_trace(make_prefill_step(cfg), mesh)
         in_sh = (_named(mesh, pspec), _named(mesh, bspec), _named(mesh, cspec))
         out_sh = (logit_spec, _named(mesh, cspec))
         return fn, (params, batch, cache), in_sh, out_sh, (2,)
 
-    fn = make_decode_step(cfg)
+    fn = _declare_on_trace(make_decode_step(cfg), mesh)
     index = specs["index"]
     in_sh = (_named(mesh, pspec), _named(mesh, bspec), _named(mesh, cspec),
              _named(mesh, P()))

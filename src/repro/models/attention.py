@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.quant.kv_cache import (cache_read, cache_write_rows,
-                                  cache_write_slice, kv_slab_spec)
+                                  cache_write_slice, kv_slab_pspec,
+                                  kv_slab_spec)
 from repro.quant.schemes import get_kv_scheme
 
 from .common import (_USE_KERNEL, Maker, apply_linear, apply_rope, rms_norm,
@@ -243,7 +244,8 @@ def gqa_forward(params, cfg: AttnConfig, x, *, positions=None,
         k_cache, v_cache = new_cache
         valid = jnp.broadcast_to(
             jnp.asarray(cache_index + s, jnp.int32), (b,))
-        if s == 1 and cfg.causal and _USE_KERNEL["value"]:
+        from repro.kernels.ops import kernel_allowed
+        if s == 1 and cfg.causal and kernel_allowed(_USE_KERNEL["value"]):
             # fused flash-decode: streams (packed) KV blocks straight from
             # the pool slab, dequantizes in-kernel, no [B,S,H,D] copy
             from repro.kernels.decode_attention import gqa_decode_attention
@@ -262,6 +264,15 @@ def gqa_cache_spec(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16
     a KV scheme name ('int8'/'fp8') for packed-codes + scales slabs."""
     shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
     return (kv_slab_spec(shape, dtype), kv_slab_spec(shape, dtype))
+
+
+def gqa_cache_pspec(cfg: AttnConfig, kv_dtype, slot_ax, head_ax):
+    """PartitionSpec twin of ``gqa_cache_spec`` for one pool layer
+    [slots, S, H, D]: slots on ``slot_ax`` (DP), heads on ``head_ax`` (TP),
+    sequence and d_head local (per-slot writes land at traced offsets;
+    packed codes cannot split along d_head)."""
+    s = kv_slab_pspec((slot_ax, None, head_ax, None), kv_dtype)
+    return (s, s)
 
 
 # ---------------------------------------------------------------------------
@@ -452,3 +463,12 @@ def mla_cache_spec(cfg: MLAConfig, batch: int, max_len: int, dtype=jnp.bfloat16)
             "token) and stays bf16 — see DESIGN.md §9")
     return (jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora), dtype),
             jax.ShapeDtypeStruct((batch, max_len, cfg.d_head_rope), dtype))
+
+
+def mla_cache_pspec(cfg: MLAConfig, slot_ax):
+    """PartitionSpec twin of ``mla_cache_spec`` for one pool layer: the
+    compressed latent and shared rope key have no head axis — only the slot
+    dim shards (the latent is consumed whole by every head's absorbed
+    contraction, so splitting it would shard a contraction dim)."""
+    from jax.sharding import PartitionSpec as P
+    return (P(slot_ax, None, None), P(slot_ax, None, None))

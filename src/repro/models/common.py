@@ -169,13 +169,23 @@ class InitMaker(Maker):
 
 
 class QuantMaker(InitMaker):
-    """Real quantized parameters: dense init -> offline numpy quantizer."""
+    """Real quantized parameters: dense init -> offline numpy quantizer.
 
-    def __init__(self, key, plan: Dict[str, str], dtype=jnp.bfloat16):
+    ``plan``: optional per-leaf scheme overrides, keyed by the leaf's
+    logical name ("attn.wo", "ffn.w_down", "moe.w_up", ...) — the same
+    names the partitioning rules use.  A plan entry wins over the config's
+    ``scheme=``; 'bf16' (or None) keeps the leaf dense.  Sharding specs for
+    a plan-built checkpoint must be built with the same plan
+    (``partitioning.param_specs(..., plan=...)``) or the trees diverge.
+    """
+
+    def __init__(self, key, plan: Optional[Dict[str, str]] = None,
+                 dtype=jnp.bfloat16):
         super().__init__(key, dtype)
-        self.plan = plan  # name-class -> scheme name (None/'bf16' = dense)
+        self.plan = dict(plan or {})
 
     def dense(self, name, stack, k, n, scheme=None):
+        scheme = self.plan.get(name, scheme)
         scheme = scheme if scheme is not None else "bf16"
         if scheme == "bf16":
             return super().dense(name, stack, k, n)

@@ -57,6 +57,25 @@ def kv_dtype_name(kv_dtype) -> str:
     return scheme.name if scheme is not None else "bf16"
 
 
+def kv_slab_pspec(axes, kv_dtype):
+    """PartitionSpec twin of ``kv_slab_spec``: same tree shape (a
+    ``QuantizedKV`` node for quantized dtypes, a bare spec otherwise), so
+    sharding specs can never drift structurally from the slab they annotate.
+
+    ``axes``: one mesh axis (or None) per *logical* slab dim
+    [..., S, H, D].  For quantized slabs the trailing ``d_head`` dim packs
+    4 codes per int32 word, so sharding it would split inside code words —
+    it must be None; the scales twin simply drops that dim.
+    """
+    from jax.sharding import PartitionSpec as P
+    scheme = get_kv_scheme(kv_dtype)
+    if scheme is None:
+        return P(*axes)
+    assert axes[-1] is None, \
+        "quantized KV packs codes along d_head: that dim cannot shard"
+    return QuantizedKV(P(*axes), P(*axes[:-1]), scheme.name)
+
+
 def kv_slab_spec(shape, kv_dtype):
     """ShapeDtypeStruct spec(s) for one KV slab of logical ``shape``
     [..., S, H, D] stored as ``kv_dtype`` ('bf16' / legacy jnp dtype / a

@@ -102,6 +102,20 @@ _V_RULES: Dict[str, Optional[str]] = {
     "ssm.conv_x": None,    # [W, di] — dim1 handled via table rule below
 }
 
+# Attention projections whose flat [.., H*Dh] dim is reshaped to heads in
+# the forward pass: that dim shards at HEAD granularity only
+# (name -> (head-carrying dim, 'q' = n_heads | 'kv' = n_kv_heads)).  The
+# raw dim size h*dh often divides a mesh axis that the head count does not
+# (2 KV heads x 16 dims on a 4-way axis) — sharding there splits inside a
+# head, which the docstring above already forbids in intent and which the
+# reshape-under-2D-mesh path miscompiles in practice (DESIGN.md §10).
+# Non-head dims of these leaves (e.g. w_uq's q_lora K dim) are untouched.
+_HEAD_ALIGNED: Dict[str, Tuple[int, str]] = {
+    "attn.wq": (1, "q"), "attn.wk": (1, "kv"), "attn.wv": (1, "kv"),
+    "attn.wo": (0, "q"),
+    "attn.w_uq": (1, "q"), "attn.w_uk": (1, "q"), "attn.w_uv": (1, "q"),
+}
+
 
 def _divides(n: int, axis_size: int) -> bool:
     return n % axis_size == 0 and n >= axis_size
@@ -138,6 +152,26 @@ def make_param_rule(cfg: ModelConfig, rules: AxisRules, dim_sizes):
             return None
         size = dim_sizes.get((name, dim), 0)
         ax = resolve(roles[dim], size)
+        # head-granularity guard: the head-carrying dim of an attention
+        # projection shards over 'model' only when the head COUNT divides
+        if ax == model and _HEAD_ALIGNED.get(base, (None,))[0] == dim:
+            heads = cfg.n_kv_heads if _HEAD_ALIGNED[base][1] == "kv" \
+                else cfg.n_heads
+            if not _divides(heads, msize):
+                ax = None
+        # Quantized leaves, K axis (dim 0): a shard boundary must land on
+        # BOTH an int32 code-word boundary and a scale-group boundary, and
+        # packed codes and group scales must shard in lockstep (a shard has
+        # to own the scale rows of its own K rows).  Sharding the packed
+        # array can never split a word (each word is one element), so the
+        # binding constraint is the twin leaf: shard K only when the twin's
+        # K dim divides the axis the same way — otherwise replicate
+        # (DESIGN.md §10).
+        if ax is not None and dim == 0 and "@" in name:
+            twin = base + ("@scales" if name.endswith("@packed")
+                           else "@packed")
+            if resolve(roles[0], dim_sizes.get((twin, 0), 0)) != ax:
+                ax = None
         # never double-assign the same axis to both dims
         if dim == 1 and ax is not None:
             ax0 = rule(name, 0)
@@ -148,9 +182,11 @@ def make_param_rule(cfg: ModelConfig, rules: AxisRules, dim_sizes):
     return rule
 
 
-def _collect_dim_sizes(cfg: ModelConfig) -> Dict:
+def _collect_dim_sizes(cfg: ModelConfig, plan: Optional[Dict] = None) -> Dict:
     """Walk with a recording maker to learn each leaf's actual dims
-    (including the packed-code / scale array dims of quantized leaves)."""
+    (including the packed-code / scale array dims of quantized leaves).
+    ``plan`` applies the same per-name scheme overrides QuantMaker honors,
+    so recorded dims track the checkpoint that was actually built."""
     from repro.quant.schemes import effective_group, get_scheme
     sizes: Dict = {}
 
@@ -159,6 +195,8 @@ def _collect_dim_sizes(cfg: ModelConfig) -> Dict:
             super().__init__(rule=lambda n, d: None, quantize=False)
 
         def dense(self, name, stack, k, n, scheme=None):
+            if plan:
+                scheme = plan.get(name, scheme)
             sizes[(name, 0)] = k
             sizes[(name, 1)] = n
             if scheme is not None and scheme != "bf16":
@@ -191,10 +229,16 @@ def _stack_axes(cfg: ModelConfig, rules: AxisRules, name: str,
 
 
 def param_specs(cfg: ModelConfig, mesh: Mesh, *, train: bool,
-                quantize: Optional[bool] = None):
-    """PartitionSpec tree matching build_params' structure exactly."""
+                quantize: Optional[bool] = None,
+                plan: Optional[Dict[str, str]] = None):
+    """PartitionSpec tree matching build_params' structure exactly.
+
+    ``plan``: the same per-name scheme overrides given to ``QuantMaker`` —
+    specs must be built with the plan the checkpoint was built with, or the
+    two trees diverge wherever the plan flips a leaf between dense and
+    packed."""
     rules = rules_from_mesh(mesh, train=train)
-    sizes = _collect_dim_sizes(cfg)
+    sizes = _collect_dim_sizes(cfg, plan)
     if rules.fsdp_axis is not None:
         sizes["__fsdp_size__"] = mesh.shape[rules.fsdp_axis]
     rule = make_param_rule(cfg, rules, sizes)
@@ -203,6 +247,11 @@ def param_specs(cfg: ModelConfig, mesh: Mesh, *, train: bool,
     class Maker(PspecMaker):
         def __init__(self):
             super().__init__(rule=rule, quantize=q)
+
+        def dense(self, name, stack, k, n, scheme=None):
+            if plan:
+                scheme = plan.get(name, scheme)
+            return super().dense(name, stack, k, n, scheme)
 
         def _spec(self, name, stack, dims):
             stack_ax = _stack_axes(cfg, rules, name, len(stack))
@@ -287,6 +336,45 @@ def cache_pspec(cfg: ModelConfig, rules: AxisRules, batch_size: int,
         return kv_spec(nstack, len(shape) - nstack - 2)
 
     return jax.tree_util.tree_map_with_path(classify, abstract)
+
+
+def serve_pool_pspec(cfg: ModelConfig, mesh: Mesh, n_slots: int, *,
+                     kv_dtype="bf16"):
+    """PartitionSpecs for the serving KV pool tree
+    ``[L, n_slots, capacity, ...]`` (DESIGN.md §10).
+
+    Contract (differs from ``cache_pspec``, which serves the static
+    one-shot shapes):
+      * slots (the continuous-batching batch dim) -> data axis — each DP
+        shard owns a contiguous band of pool rows for a request's lifetime;
+      * heads -> 'model' — TP attention keeps each shard's heads local
+        end-to-end (replicated when ``n_kv_heads`` does not divide);
+      * the sequence axis stays LOCAL: prefill-chunk and per-row decode
+        writes land at *traced* offsets, and sharding S would turn every
+        cache write into cross-shard traffic;
+      * the packed code-word dim of a quantized slab never shards (4 codes
+        per int32 word along d_head); its scales twin drops that dim.
+
+    Divisibility guards mirror ``param_specs``: an axis that does not
+    divide stays replicated rather than padded.
+    """
+    from repro.models import attention as A
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"serve_pool_pspec covers slot-pool families, not {cfg.family!r}")
+    rules = rules_from_mesh(mesh, train=False)
+    dax = rules.data_axis
+    slot_ax = dax if _divides(n_slots, mesh.shape[dax]) else None
+    if cfg.use_mla:
+        per_layer = A.mla_cache_pspec(cfg.mla_cfg(), slot_ax)
+    else:
+        head_ax = rules.model_axis \
+            if _divides(cfg.n_kv_heads, rules.model_size) else None
+        per_layer = A.gqa_cache_pspec(cfg.attn_cfg(), kv_dtype,
+                                      slot_ax, head_ax)
+    # prepend the (L,) layer-stack dim (never sharded: lax.scan carries it)
+    return jax.tree_util.tree_map(lambda p: P(None, *p), per_layer,
+                                  is_leaf=lambda x: isinstance(x, P))
 
 
 def named(mesh: Mesh, spec_tree):

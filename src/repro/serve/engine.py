@@ -28,18 +28,31 @@ drains it) drive these same primitives, so the two paths cannot drift —
 greedy one-shot output IS scheduler output by construction.  Families
 without a sliceable KV cache (ssm / hybrid / audio / vlm) keep the legacy
 static-batch loop.
+
+**Sharded serving** (DESIGN.md §10): with ``ServeConfig.mesh`` set to a
+``dp x tp`` device mesh (axes 'data' x 'model'), the pool step primitives
+become mesh-aware jits with explicit in/out shardings — params via
+``partitioning.param_specs`` (packed code words and group scales shard
+along N on the model axis; K only where the split lands on word AND
+scale-group boundaries), the pool cache via
+``partitioning.serve_pool_pspec`` (slots on 'data', KV heads on 'model').
+The scheduler stays host-side and byte-identical: it sees the same
+alloc/free/lengths interface whether the slab under it lives on one chip
+or thirty-two.  Buffer donation survives because the cache's in- and
+out-shardings are pinned equal.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import transformer as T
+from repro.models.common import QLinear
 
 from .kv_pool import KVCachePool, POOLABLE_FAMILIES, slots_for_budget
 
@@ -59,6 +72,19 @@ class ServeConfig:
     # slot count from KV bytes/token instead of taking ``n_slots`` —
     # the knob that turns cache quantization into served concurrency
     cache_budget_bytes: Optional[int] = None
+    # optional jax.sharding.Mesh ('data' x 'model' axes): shard params and
+    # the KV pool across it (DESIGN.md §10).  None = single-device jits.
+    mesh: Any = None
+
+
+def _has_qlinear(params) -> bool:
+    """Whether the parameter tree carries packed quantized leaves (decides
+    the ``quantize=`` parameterization of the matching spec tree)."""
+    found = []
+    jax.tree_util.tree_map(
+        lambda x: found.append(isinstance(x, QLinear)), params,
+        is_leaf=lambda x: isinstance(x, QLinear))
+    return any(found)
 
 
 # Families served through the slot pool / scheduler; VLM is poolable but its
@@ -67,10 +93,39 @@ SCHEDULABLE_FAMILIES = ("dense", "moe")
 
 
 class ServingEngine:
-    def __init__(self, cfg: T.ModelConfig, params, serve_cfg: ServeConfig):
+    def __init__(self, cfg: T.ModelConfig, params, serve_cfg: ServeConfig, *,
+                 plan: Optional[Dict[str, str]] = None):
+        """``plan``: the per-name scheme overrides the checkpoint was built
+        with (QuantMaker plan) — required under a mesh iff non-empty, so the
+        sharding spec tree matches the parameter tree leaf for leaf."""
         self.cfg = cfg
-        self.params = params
         self.scfg = serve_cfg
+        self.mesh = serve_cfg.mesh
+        self._plan = dict(plan or {})
+        self._param_shardings = None
+        self._sharded_steps: Dict = {}   # (n_slots, capacity, kv_dtype) -> jits
+
+        # Pallas kernels are not GSPMD-partitionable (kernels/ops.py): the
+        # guard flag is declared before every step call (not just here) so
+        # lazily-traced jits always see THIS engine's mesh, regardless of
+        # what other engines were constructed in between
+        self._partitioned = self.mesh is not None and self.mesh.size > 1
+        if self.mesh is not None:
+            from repro.runtime import partitioning as PT
+            self._declare_partitioning()
+            pspec = PT.param_specs(cfg, self.mesh, train=False,
+                                   quantize=_has_qlinear(params),
+                                   plan=self._plan or None)
+            if jax.tree_util.tree_structure(params) != \
+                    jax.tree_util.tree_structure(
+                        pspec, is_leaf=lambda x: isinstance(x, P)):
+                raise ValueError(
+                    "parameter tree does not match its sharding spec tree — "
+                    "params built with a QuantMaker plan must pass the same "
+                    "plan to ServingEngine(..., plan=...)")
+            self._param_shardings = PT.named(self.mesh, pspec)
+            params = jax.device_put(params, self._param_shardings)
+        self.params = params
 
         mcfg = cfg
 
@@ -92,8 +147,9 @@ class ServingEngine:
         # the pool cache is donated: the caller rebinds pool.cache to the
         # result immediately, and without donation every token step would
         # materialize a second copy of the whole [L, n_slots, capacity, ...]
-        # tree (the dominant memory/memcpy cost of the serving loop)
-        @partial(jax.jit, donate_argnums=(2,), static_argnums=(5,))
+        # tree (the dominant memory/memcpy cost of the serving loop).
+        # Under a mesh the bare jits below are replaced per pool geometry by
+        # ``_steps_for`` with explicit in/out shardings.
         def prefill_chunk(params, tokens, cache, slot, offset, with_logits):
             """tokens [1, C] into pool slot ``slot`` at position ``offset``;
             returns ([C, V] logits, updated pool cache).  ``with_logits=False``
@@ -111,7 +167,6 @@ class ServingEngine:
                 cache, slot_cache)
             return (logits[0] if with_logits else None), cache
 
-        @partial(jax.jit, donate_argnums=(2,))
         def decode_slots(params, tokens, cache, lengths):
             """tokens [n_slots, 1]; row i writes/attends at lengths[i]."""
             logits, _, cache = T.forward(mcfg, params, {"tokens": tokens},
@@ -121,8 +176,76 @@ class ServingEngine:
 
         self._prefill = prefill
         self._decode = decode
-        self._prefill_chunk = prefill_chunk
-        self._decode_slots = decode_slots
+        self._prefill_chunk_fn = prefill_chunk
+        self._decode_slots_fn = decode_slots
+        # single-device jits (mesh=None path; also the tracing baseline)
+        self._prefill_chunk = jax.jit(prefill_chunk, donate_argnums=(2,),
+                                      static_argnums=(5,))
+        self._decode_slots = jax.jit(decode_slots, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    # Mesh-aware step construction (DESIGN.md §10)
+    # ------------------------------------------------------------------
+    def _declare_partitioning(self) -> None:
+        """Sync the global kernel guard to this engine's mesh.  Called
+        before every step invocation: jits trace on their first call, and
+        the kernel-vs-jnp decision is baked in at trace time."""
+        from repro.kernels.ops import set_under_partitioning
+        set_under_partitioning(self._partitioned)
+
+    @property
+    def topology(self) -> Optional[Dict[str, int]]:
+        """{'n_devices', 'dp', 'tp'} under a mesh, else None."""
+        if self.mesh is None:
+            return None
+        tp = int(self.mesh.shape.get("model", 1))
+        return {"n_devices": int(self.mesh.size),
+                "dp": int(self.mesh.size) // tp, "tp": tp}
+
+    def pool_shardings(self, pool: KVCachePool):
+        """NamedSharding tree for ``pool``'s cache under this engine's
+        mesh (None when meshless)."""
+        if self.mesh is None:
+            return None
+        from repro.runtime import partitioning as PT
+        spec = PT.serve_pool_pspec(self.cfg, self.mesh, pool.n_slots,
+                                   kv_dtype=pool.kv_dtype)
+        return PT.named(self.mesh, spec)
+
+    def _steps_for(self, pool: KVCachePool):
+        """(prefill_chunk, decode_slots) jits for ``pool``'s geometry.
+
+        Meshless: the bare jits.  Under a mesh: jits carrying explicit
+        in/out shardings — cache in-sharding == out-sharding keeps donation
+        alive; tokens/lengths ride the slot (data) axis; scalars and the
+        [1, C] chunk tokens are replicated.  Cached per (n_slots, capacity,
+        kv_dtype) since the cache sharding depends on the pool shape.
+        """
+        self._declare_partitioning()
+        if self.mesh is None:
+            return self._prefill_chunk, self._decode_slots
+        key = (pool.n_slots, pool.capacity, pool.kv_dtype)
+        steps = self._sharded_steps.get(key)
+        if steps is None:
+            cache_sh = self.pool_shardings(pool)
+            rep = NamedSharding(self.mesh, P())
+            # the slot axis the pool spec actually chose (divisibility
+            # guards included) — tokens/lengths must ride the same axis
+            slot_ax = jax.tree_util.tree_leaves(cache_sh)[0].spec[1]
+            tok_sh = NamedSharding(self.mesh, P(slot_ax, None))
+            len_sh = NamedSharding(self.mesh, P(slot_ax))
+            pc = jax.jit(
+                self._prefill_chunk_fn, donate_argnums=(2,),
+                static_argnums=(5,),
+                in_shardings=(self._param_shardings, rep, cache_sh, rep, rep),
+                out_shardings=(None, cache_sh))
+            ds = jax.jit(
+                self._decode_slots_fn, donate_argnums=(2,),
+                in_shardings=(self._param_shardings, tok_sh, cache_sh,
+                              len_sh),
+                out_shardings=(None, cache_sh))
+            steps = self._sharded_steps[key] = (pc, ds)
+        return steps
 
     # ------------------------------------------------------------------
     # Pool-based step primitives (the scheduler's interface)
@@ -141,9 +264,12 @@ class ServingEngine:
                     align=self.scfg.prefill_chunk)
             else:
                 n_slots = self.scfg.n_slots
-        return KVCachePool(self.cfg, n_slots, max_len,
+        pool = KVCachePool(self.cfg, n_slots, max_len,
                            kv_dtype=self.scfg.kv_dtype,
                            align=self.scfg.prefill_chunk)
+        if self.mesh is not None:
+            pool.place(self.pool_shardings(pool))
+        return pool
 
     def prefill_chunk_into_slot(self, pool: KVCachePool, slot: int,
                                 prompt: np.ndarray, offset: int):
@@ -160,7 +286,8 @@ class ServingEngine:
         chunk = np.zeros((1, C), np.int32)
         chunk[0, :n] = prompt[offset:offset + n]
         final = offset + n >= prompt.size
-        logits, pool.cache = self._prefill_chunk(
+        prefill_chunk, _ = self._steps_for(pool)
+        logits, pool.cache = prefill_chunk(
             self.params, jnp.asarray(chunk), pool.cache,
             jnp.int32(slot), jnp.int32(offset), final)
         pool.lengths[slot] = offset + n
@@ -186,7 +313,8 @@ class ServingEngine:
         caller commits the write by incrementing ``pool.lengths`` for the
         rows it considers active."""
         tokens = np.asarray(tokens, np.int32).reshape(pool.n_slots, 1)
-        logits, pool.cache = self._decode_slots(
+        _, decode_slots = self._steps_for(pool)
+        logits, pool.cache = decode_slots(
             self.params, jnp.asarray(tokens), pool.cache,
             jnp.asarray(pool.lengths))
         return jax.block_until_ready(logits)
@@ -237,6 +365,7 @@ class ServingEngine:
             key, logits / self.scfg.temperature).astype(jnp.int32)
 
     def _generate_legacy(self, batch, max_new_tokens: int, seed: int):
+        self._declare_partitioning()
         cfg, scfg = self.cfg, self.scfg
         tokens = jnp.asarray(batch["tokens"], jnp.int32)
         b, s = tokens.shape
@@ -281,6 +410,7 @@ class ServingEngine:
 
     def score(self, batch: Dict) -> np.ndarray:
         """Teacher-forced mean NLL per row (serving-quality check)."""
+        self._declare_partitioning()
         logits, _, _ = T.forward(self.cfg, self.params, batch, mode="train")
         if self.cfg.family == "vlm":
             logits = logits[:, self.cfg.n_patches:]

@@ -97,9 +97,23 @@ class KVCachePool:
         self.kv_dtype = kv_dtype_name(kv_dtype)
         self.cache = T.init_cache(cfg, n_slots, self.capacity,
                                   kv_dtype=kv_dtype)
+        self.shardings = None           # set by place() under a device mesh
         self.lengths = np.zeros((n_slots,), np.int32)   # committed positions
         self._free: List[int] = list(range(n_slots))    # min-heap of slot ids
         heapq.heapify(self._free)
+
+    def place(self, shardings) -> "KVCachePool":
+        """Commit the cache tree to a device mesh: one NamedSharding per
+        slab (``partitioning.serve_pool_pspec``: slots on the data axis,
+        heads on 'model').  The engine's mesh-aware jits pin the same
+        shardings on their cache in/outputs, so the slabs never migrate
+        after this one placement and buffer donation stays in-place
+        (DESIGN.md §10).  Host-side bookkeeping (lengths / free heap) is
+        untouched — the scheduler cannot tell a sharded pool from a local
+        one."""
+        self.shardings = shardings
+        self.cache = jax.device_put(self.cache, shardings)
+        return self
 
     # -- memory accounting -------------------------------------------------
     @property

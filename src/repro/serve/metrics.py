@@ -27,6 +27,9 @@ def _pct(values: List[float], q: float) -> float:
 class ServeMetrics:
     def __init__(self, n_slots: int):
         self.n_slots = n_slots
+        # {'n_devices', 'dp', 'tp'} when serving under a mesh (set by the
+        # scheduler from engine.topology); None for single-device serving
+        self.topology: Optional[Dict] = None
         self.ttft: List[float] = []
         self.itl: List[float] = []
         self.e2e: List[float] = []            # per-request total latency
@@ -80,6 +83,8 @@ class ServeMetrics:
             if wall > 0 else float("nan"),
             "slot_occupancy_mean": round(self.occupancy_mean, 4),
         }
+        if self.topology is not None:
+            out["topology"] = dict(self.topology)
         for name, xs in (("ttft", self.ttft), ("itl", self.itl),
                          ("e2e_latency", self.e2e)):
             if xs:

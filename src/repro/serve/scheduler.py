@@ -93,6 +93,9 @@ class Scheduler:
         self.running: Dict[int, Request] = {}      # slot -> Request
         self.finished: List[Request] = []
         self.metrics = ServeMetrics(self.pool.n_slots)
+        # sharded serving is invisible to the scheduling logic (the pool
+        # interface is identical), but the mesh shape belongs in reports
+        self.metrics.topology = getattr(engine, "topology", None)
         self._clock = clock
         self._next_id = 0
         self.n_steps = 0

@@ -47,7 +47,7 @@ def test_forward_and_train_step(arch):
 def test_quantized_forward(arch):
     """Serving path: quantized projection/FFN weights (the paper's MACs)."""
     cfg = get_config(arch, smoke=True)
-    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0), plan={}))
+    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0)))
     batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
     logits, _, _ = jax.jit(
         lambda p, b: T.forward(cfg, p, b, mode="prefill"))(params, batch)

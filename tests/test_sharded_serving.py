@@ -1,0 +1,322 @@
+"""Tensor-parallel serving tests (DESIGN.md §10).
+
+Three tiers:
+  * spec-level assertions run everywhere — they build PartitionSpec trees
+    over an ``AbstractMesh`` (no devices needed);
+  * single-device mesh tests run everywhere — a (1, 1) mesh exercises the
+    whole mesh code path (device_put, explicit in/out shardings, donation)
+    without multi-device XLA;
+  * multi-device tests need >= 8 host devices and skip otherwise — CI's
+    multi-device job sets ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    (so does ``launch/serve.py --force-host-devices 8``).
+"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.common import InitMaker, QLinear, QuantMaker
+from repro.models import transformer as T
+from repro.quant.schemes import get_scheme
+from repro.runtime import partitioning as PT
+from repro.serve import (Request, SamplingParams, ServeConfig, ServingEngine,
+                         Scheduler)
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(autouse=True)
+def _reset_partitioning_flag():
+    """Engines with a multi-device mesh flip the global kernel guard; keep
+    it from leaking into later test files."""
+    yield
+    from repro.kernels import ops
+    ops.set_under_partitioning(False)
+
+
+def _amesh(dp, tp):
+    return AbstractMesh((("data", dp), ("model", tp)))
+
+
+def _qlinear_spec_leaves(cfg, specs):
+    """[(name-path, QLinear spec node)] for every quantized leaf."""
+    out = []
+    jax.tree_util.tree_map_with_path(
+        lambda path, leaf: out.append((jax.tree_util.keystr(path), leaf))
+        if isinstance(leaf, QLinear) else None,
+        specs, is_leaf=lambda x: isinstance(x, (QLinear, P)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Spec-level: packed-word / scale-group K alignment (no devices needed)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,scheme_name", [
+    ("granite-8b", "awq_int4"),      # group 128
+    ("starcoder2-15b", "mxfp4"),     # group 32
+])
+def test_param_specs_k_sharding_respects_words_and_scale_groups(
+        arch, scheme_name):
+    """On an 8-way model axis, a K-axis shard boundary of a packed
+    quantized leaf must land on an int32 code-word boundary AND a
+    scale-group boundary, and codes/scales must shard in lockstep."""
+    cfg = get_config(arch)
+    scheme = get_scheme(scheme_name)
+    tp = 8
+    mesh = _amesh(1, tp)
+    specs = PT.param_specs(cfg, mesh, train=False, quantize=True)
+    qleaves = _qlinear_spec_leaves(cfg, specs)
+    assert qleaves, f"{arch}: expected quantized leaves"
+    per_word = 32 // scheme.weight_bits
+    n_k_sharded = 0
+    for name_path, leaf in qleaves:
+        # K axis = first dim after the layer stack
+        nstack = len(leaf.packed) - 2
+        pk, sk = leaf.packed[nstack], leaf.scales[nstack]
+        assert pk == sk, (
+            f"{name_path}: packed K-axis={pk!r} != scales K-axis={sk!r} "
+            "(a shard must own the scale rows of its own K rows)")
+        if pk != "model":
+            continue
+        n_k_sharded += 1
+        k = leaf.shape[0]
+        k_shard = k // tp
+        assert k_shard % per_word == 0, \
+            f"{name_path}: K shard {k_shard} splits an int32 code word"
+        group = min(scheme.group_size, k)
+        assert k_shard % group == 0, \
+            f"{name_path}: K shard {k_shard} splits a scale group {group}"
+    # the full-size configs genuinely exercise K sharding (wo / w_down)
+    assert n_k_sharded > 0, f"{arch}: no K-sharded quantized leaf at tp={tp}"
+
+
+def test_param_specs_blocks_k_shard_when_scale_groups_do_not_divide():
+    """Smoke dims have single-group scales (K <= group): the K axis must
+    stay replicated even though the packed word count divides the axis —
+    previously this sharded codes against unsplittable scales."""
+    cfg = get_config("granite-8b", smoke=True)
+    specs = PT.param_specs(cfg, _amesh(1, 4), train=False, quantize=True)
+    for name_path, leaf in _qlinear_spec_leaves(cfg, specs):
+        nstack = len(leaf.packed) - 2
+        assert leaf.packed[nstack] is None, \
+            f"{name_path}: K sharded across a single scale group"
+
+
+def test_param_specs_head_granularity_guard():
+    """Attention projection head dims shard only when the head COUNT
+    divides the model axis: granite has 32 q / 8 kv heads, so at tp=8 both
+    shard, at tp=16 only q does — even though the raw dim h*dh divides 16
+    in both cases (sub-head splits broke the [b,s,h,dh] reshape)."""
+    cfg = get_config("granite-8b")   # 32 heads, 8 kv heads
+
+    def axes(tp):
+        specs = PT.param_specs(cfg, _amesh(1, tp), train=False, quantize=True)
+        q = dict(_qlinear_spec_leaves(cfg, specs))
+        wq = [v for k, v in q.items() if "wq" in k][0]
+        wk = [v for k, v in q.items() if "wk" in k][0]
+        return wq.packed[-1], wk.packed[-1]
+
+    assert axes(8) == ("model", "model")
+    assert axes(16) == ("model", None)   # 8 kv heads cannot split 16 ways
+
+
+def test_serve_pool_pspec_axes_and_structure():
+    """Pool specs: slots on 'data', heads on 'model' (iff divisible), the
+    packed d_head dim NEVER sharded, scales tree mirrors the slab tree."""
+    cfg = get_config("granite-8b")   # 8 kv heads
+    mesh = _amesh(2, 4)
+    spec = PT.serve_pool_pspec(cfg, mesh, 8, kv_dtype="int8")
+    k_slab, v_slab = spec
+    for slab in (k_slab, v_slab):
+        # [L, slots, S, H, Dw] packed + [L, slots, S, H] scales
+        assert slab.packed == P(None, "data", None, "model", None)
+        assert slab.scales == P(None, "data", None, "model")
+    # bf16 pool: plain specs, same axes
+    spec = PT.serve_pool_pspec(cfg, mesh, 8, kv_dtype="bf16")
+    assert spec[0] == P(None, "data", None, "model", None)
+    # indivisible: 2 kv heads on a 4-way axis, 3 slots on a 2-way axis
+    smoke = get_config("granite-8b", smoke=True)
+    spec = PT.serve_pool_pspec(smoke, mesh, 3, kv_dtype="int8")
+    assert spec[0].packed == P(None, None, None, None, None)
+    with pytest.raises(ValueError):
+        PT.serve_pool_pspec(get_config("xlstm-350m"), mesh, 8)
+
+
+def test_mla_pool_pspec_latent_stays_whole():
+    """MLA pools shard slots only: the compressed latent is consumed whole
+    by every head's absorbed contraction."""
+    cfg = get_config("deepseek-v2-236b")
+    spec = PT.serve_pool_pspec(cfg, _amesh(4, 2), 8, kv_dtype="bf16")
+    assert spec == (P(None, "data", None, None), P(None, "data", None, None))
+
+
+# ---------------------------------------------------------------------------
+# QuantMaker plan override (satellite) + spec coherence
+# ---------------------------------------------------------------------------
+def test_quantmaker_plan_overrides_config_scheme():
+    """A plan entry wins over the config scheme per leaf name: forcing
+    ffn.w_down dense and attn.wq to mxfp4 changes exactly those leaves."""
+    cfg = get_config("granite-8b", smoke=True)     # config: awq_int4
+    plan = {"ffn.w_down": "bf16", "attn.wq": "mxfp4"}
+    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0), plan=plan))
+    layers = params["layers"]
+    assert not isinstance(layers["ffn"]["w_down"], QLinear)   # forced dense
+    assert layers["attn"]["wq"].scheme_name == "mxfp4"        # forced mxfp4
+    assert layers["attn"]["wk"].scheme_name == "awq_int4"     # untouched
+    # param_specs built with the same plan matches the tree leaf for leaf
+    specs = PT.param_specs(cfg, _amesh(1, 4), train=False, quantize=True,
+                           plan=plan)
+    assert jax.tree_util.tree_structure(params) == \
+        jax.tree_util.tree_structure(
+            specs, is_leaf=lambda x: isinstance(x, P))
+    # ... and without the plan it does NOT (the coherence failure the
+    # engine guards against)
+    specs_noplan = PT.param_specs(cfg, _amesh(1, 4), train=False,
+                                  quantize=True)
+    assert jax.tree_util.tree_structure(params) != \
+        jax.tree_util.tree_structure(
+            specs_noplan, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_engine_rejects_plan_mismatch_under_mesh():
+    cfg = get_config("granite-8b", smoke=True)
+    plan = {"ffn.w_down": "bf16"}
+    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0), plan=plan))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="plan"):
+        ServingEngine(cfg, params, ServeConfig(max_len=32, mesh=mesh))
+    # with the plan the engine builds (and the same params serve fine)
+    ServingEngine(cfg, params, ServeConfig(max_len=32, mesh=mesh), plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# Kernel guard under partitioning (satellite)
+# ---------------------------------------------------------------------------
+def test_kernel_guard_downgrades_loudly_under_partitioning():
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.quant.schemes import quantize_weights
+    qw = quantize_weights(get_scheme("awq_int4"),
+                          np.random.default_rng(0).normal(size=(64, 16)))
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(2, 64)),
+                    jnp.bfloat16)
+    ref = ops.quantized_matmul(x, qw, use_kernel=False)
+    try:
+        ops.set_under_partitioning(True)
+        with pytest.warns(UserWarning, match="not GSPMD-partitionable"):
+            out = ops.quantized_matmul(x, qw, use_kernel=True)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+    finally:
+        ops.set_under_partitioning(False)
+
+
+# ---------------------------------------------------------------------------
+# Mesh engine: single-device path (runs in the tier-1 fast loop)
+# ---------------------------------------------------------------------------
+def test_mesh_engine_single_device_bit_identical():
+    """A (1, 1) mesh walks the whole sharded code path — param placement,
+    explicit in/out shardings, pool placement, donation — and must emit
+    exactly the meshless tokens."""
+    cfg = get_config("granite-8b", smoke=True)
+    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0)))
+    batch = {"tokens": np.random.default_rng(2).integers(
+        1, cfg.vocab, (3, 9)).astype(np.int32)}
+    base = ServingEngine(cfg, params, ServeConfig(
+        max_len=32, n_slots=4, prefill_chunk=8, kv_dtype="int8"))
+    ref = base.generate(batch, max_new_tokens=5)["generated"]
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    eng = ServingEngine(cfg, params, ServeConfig(
+        max_len=32, n_slots=4, prefill_chunk=8, kv_dtype="int8", mesh=mesh))
+    assert eng.topology == {"n_devices": 1, "dp": 1, "tp": 1}
+    out = eng.generate(batch, max_new_tokens=5)["generated"]
+    np.testing.assert_array_equal(ref, out)
+    # pool really is placed with the serve-side shardings
+    pool = eng.new_pool()
+    assert pool.shardings is not None
+
+
+# ---------------------------------------------------------------------------
+# Multi-device: the acceptance contract (CI multi-device job)
+# ---------------------------------------------------------------------------
+def _run_workload(engine, prompts, max_new=6):
+    """Scheduler run with the last request admitted mid-flight."""
+    sched = Scheduler(engine)
+    reqs = [sched.submit(Request(prompt=p,
+                                 sampling=SamplingParams(max_new_tokens=max_new)))
+            for p in prompts[:-1]]
+    while sched.n_decode_steps < 2:
+        sched.step()
+    late = sched.submit(Request(
+        prompt=prompts[-1], sampling=SamplingParams(max_new_tokens=max_new)))
+    sched.run(max_steps=400)
+    assert all(r.is_finished for r in reqs + [late])
+    return [list(r.output_tokens) for r in reqs + [late]], sched
+
+
+@multi_device
+def test_dp2_tp4_bit_identical_greedy_with_mid_flight_admission():
+    """THE sharded-serving contract: greedy output on a dp=2 x tp=4 mesh,
+    quantized weights AND int8 KV pool, including a mid-flight admission,
+    is bit-identical to the single-device run (DESIGN.md §10)."""
+    cfg = get_config("granite-8b", smoke=True)
+    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, cfg.vocab, (n,)).astype(np.int32)
+               for n in (9, 6, 11, 8)]
+
+    def engine(mesh):
+        return ServingEngine(cfg, params, ServeConfig(
+            max_len=32, n_slots=8, prefill_chunk=8, kv_dtype="int8",
+            mesh=mesh))
+
+    ref, _ = _run_workload(engine(None), prompts)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    got, sched = _run_workload(engine(mesh), prompts)
+    assert got == ref
+    assert sched.metrics.report()["topology"] == \
+        {"n_devices": 8, "dp": 2, "tp": 4}
+
+
+@multi_device
+def test_tp8_bit_identical_bf16_pool():
+    """Pure model parallelism, plain bf16 pool: same contract."""
+    cfg = get_config("granite-8b", smoke=True)
+    params = T.build_params(cfg, InitMaker(jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, cfg.vocab, (n,)).astype(np.int32)
+               for n in (8, 10, 5)]
+
+    def engine(mesh):
+        return ServingEngine(cfg, params, ServeConfig(
+            max_len=32, n_slots=4, prefill_chunk=8, mesh=mesh))
+
+    ref, _ = _run_workload(engine(None), prompts)
+    got, _ = _run_workload(
+        engine(jax.make_mesh((1, 8), ("data", "model"))), prompts)
+    assert got == ref
+
+
+@multi_device
+def test_sharded_pool_placement_and_donation():
+    """The pool cache is actually laid out per serve_pool_pspec (slots on
+    'data'), and the decode step donates: the cache buffer is rebound, not
+    copied (same sharding in and out)."""
+    cfg = get_config("granite-8b", smoke=True)
+    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0)))
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    eng = ServingEngine(cfg, params, ServeConfig(
+        max_len=32, n_slots=8, prefill_chunk=8, kv_dtype="int8", mesh=mesh))
+    pool = eng.new_pool()
+    leaf = jax.tree_util.tree_leaves(pool.cache)[0]
+    assert leaf.sharding.spec[1] == "data"          # slots axis sharded
+    slot = pool.alloc()
+    prompt = np.arange(1, 9, dtype=np.int32)
+    eng.prefill_into_slots(pool, [slot], [prompt])
+    before = jax.tree_util.tree_leaves(pool.cache)[0].sharding
+    toks = np.zeros((8,), np.int32)
+    eng.decode_slots(pool, toks)
+    after = jax.tree_util.tree_leaves(pool.cache)[0].sharding
+    assert before == after                           # layout is pinned

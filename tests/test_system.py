@@ -17,7 +17,7 @@ from repro.models import transformer as T
 def test_serving_engine_generates():
     from repro.serve import ServeConfig, ServingEngine
     cfg = get_config("granite-8b", smoke=True)
-    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0), plan={}))
+    params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0)))
     eng = ServingEngine(cfg, params, ServeConfig(max_len=48))
     batch = {"tokens": np.random.default_rng(0).integers(
         1, cfg.vocab, (2, 8)).astype(np.int32)}
