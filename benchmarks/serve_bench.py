@@ -12,10 +12,32 @@ point runs the same seeded workload at one dtype and reports slots x tok/s
 x TTFT for its cache cost.  With ``--cache-budget-mb`` the slot count is
 *derived* from the budget per dtype, so the sweep directly measures the
 quantization -> concurrency trade (int8/fp8 fit ~2x the slots of bf16).
-One JSON is emitted per sweep point (``--out-dir`` to write files).
+One JSON is emitted per sweep point (``--out-dir`` to write files);
+``--baseline-json PATH`` appends the whole sweep (bench args + points) to
+PATH, so multi-regime baselines are built by invoking the bench several
+times against the same file.  ``benchmarks/BENCH_serve_baseline.json`` is
+produced exactly that way:
+
+    rm -f benchmarks/BENCH_serve_baseline.json
+    python benchmarks/serve_bench.py --kv-dtype bf16,int8 --requests 6 \
+        --rate 1 --seed 6 --max-new 33 --max-burst 8 \
+        --baseline-json benchmarks/BENCH_serve_baseline.json
+    # ... then the same line with --max-burst 1, and the contended pair
+    # (--requests 8 --rate 3 --seed 0) at --max-burst 8 and 1.
+
+``--max-burst`` caps the device-resident decode burst (DESIGN.md §11);
+each point reports ``decode_dispatches_per_token``, ``host_syncs_per_token``
+and a burst-length histogram, so sweeping ``--max-burst 1`` vs ``8``
+measures the dispatch/sync amortization directly — pool geometry is a pure
+function of the workload shape, identical across burst caps.  Warmup
+compiles the whole power-of-two burst ladder off the clock (one throwaway
+request per reachable burst length), so the timed run is steady-state.
 
 Smoke (CPU, ~1 min incl. compile):
     python benchmarks/serve_bench.py
+Burst amortization sweep:
+    python benchmarks/serve_bench.py --max-burst 1 --out-dir bench_out
+    python benchmarks/serve_bench.py --max-burst 8 --out-dir bench_out
 Quantized-cache sweep at a fixed budget:
     python benchmarks/serve_bench.py --kv-dtype bf16,fp8,int8 \
         --cache-budget-mb 2 --out-dir bench_out
@@ -42,11 +64,15 @@ from repro.launch.cli import force_host_devices, serving_mesh
 def build_engine(args, cfg, params, kv_dtype, mesh):
     from repro.serve import ServeConfig, ServingEngine
     budget = int(args.cache_budget_mb * 1e6) if args.cache_budget_mb else None
+    # NOTE: pool geometry (max_len, and any budget-derived slot count) is a
+    # pure function of the workload shape — NOT of --max-burst — so sweep
+    # points at different burst caps measure dispatch amortization against
+    # an identical engine configuration
     scfg = ServeConfig(max_len=args.prompt_len + args.max_new,
                        temperature=args.temperature,
                        n_slots=args.n_slots, prefill_chunk=args.chunk,
                        kv_dtype=kv_dtype, cache_budget_bytes=budget,
-                       mesh=mesh)
+                       max_burst=args.max_burst, mesh=mesh)
     return ServingEngine(cfg, params, scfg)
 
 
@@ -62,16 +88,26 @@ def make_workload(args, vocab):
     return arrivals, prompts
 
 
-def warmup(engine, prompts):
-    """Compile the chunk/decode/sample steps off the clock so the first
-    request's TTFT measures scheduling, not XLA."""
+def warmup(engine, prompts, max_new):
+    """Compile the chunk/decode/burst steps off the clock so the first
+    request's TTFT measures scheduling, not XLA.
+
+    The timed run can only ever plan power-of-two burst lengths
+    K <= min(max_burst, max_new - 1) (a row's remaining budget after its
+    prefill-sampled first token is max_new - 1), so one throwaway request
+    per such K — with max_new = K + 1, whose lone burst is planned exactly
+    K — compiles the complete ladder without touching the engine's pool
+    geometry."""
     from repro.serve import Request, SamplingParams, Scheduler
     sched = Scheduler(engine)
-    sched.submit(Request(prompt=prompts[0],
-                         sampling=SamplingParams(
-                             temperature=engine.scfg.temperature,
-                             max_new_tokens=2)))
-    sched.run(max_steps=100)
+    top = min(engine.scfg.max_burst, max(max_new - 1, 1))
+    ladder = [1 << i for i in range(top.bit_length()) if (1 << i) <= top]
+    for k in ladder:
+        sched.submit(Request(prompt=prompts[0],
+                             sampling=SamplingParams(
+                                 temperature=engine.scfg.temperature,
+                                 max_new_tokens=k + 1)))
+        sched.run(max_steps=200)
 
 
 def run_point(args, cfg, engine, kv_dtype):
@@ -80,7 +116,7 @@ def run_point(args, cfg, engine, kv_dtype):
     arrivals, prompts = make_workload(args, cfg.vocab)
     if not args.no_warmup:
         t0 = time.monotonic()
-        warmup(engine, prompts)
+        warmup(engine, prompts, args.max_new)
         print(f"== warmup (compile) {time.monotonic() - t0:.1f}s")
 
     sched = Scheduler(engine)
@@ -125,6 +161,14 @@ def run_point(args, cfg, engine, kv_dtype):
     rep["n_slots"] = pool.n_slots
     rep["kv_bytes_per_token"] = pool.bytes_per_token
     rep["kv_cache_mb"] = round(pool.cache_bytes / 1e6, 3)
+    # burst amortization (DESIGN.md §11): dispatches / host syncs per token
+    # (decode_dispatches_per_token and burst_hist come from the metrics
+    # report itself)
+    rep["max_burst"] = sched.max_burst
+    rep["host_syncs"] = sched.n_host_syncs
+    if rep.get("total_new_tokens"):
+        rep["host_syncs_per_token"] = round(
+            sched.n_host_syncs / rep["total_new_tokens"], 4)
     if args.cache_budget_mb:
         rep["cache_budget_mb"] = args.cache_budget_mb
     return rep
@@ -143,6 +187,11 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-warmup", action="store_true")
+    ap.add_argument("--max-burst", type=int, default=8,
+                    help="device-resident decode burst cap (1 = per-token "
+                         "dispatch, DESIGN.md §11)")
+    ap.add_argument("--baseline-json", default=None,
+                    help="write {args, points} for the whole sweep here")
     ap.add_argument("--kv-dtype", default="bf16",
                     help="comma-separated pool dtypes to sweep: bf16,fp8,int8")
     ap.add_argument("--cache-budget-mb", type=float, default=None,
@@ -179,8 +228,9 @@ def main():
         print(json.dumps(rep, indent=2))
         if args.out_dir:
             os.makedirs(args.out_dir, exist_ok=True)
-            path = os.path.join(args.out_dir,
-                                f"serve_{cfg.name}_{kv_dtype}.json")
+            path = os.path.join(
+                args.out_dir,
+                f"serve_{cfg.name}_{kv_dtype}_burst{args.max_burst}.json")
             with open(path, "w") as f:
                 json.dump(rep, f, indent=2)
             print(f"== wrote {path}")
@@ -189,12 +239,35 @@ def main():
     if len(reports) > 1:
         print(f"\n== sweep summary ({cfg.name})")
         print(f"{'kv_dtype':>8} {'slots':>6} {'B/tok':>6} {'tok/s':>8} "
-              f"{'ttft_p50':>9} {'occupancy':>10}")
+              f"{'disp/tok':>9} {'ttft_p50':>9} {'occupancy':>10}")
         for r in reports:
             print(f"{r['kv_dtype']:>8} {r['n_slots']:>6} "
                   f"{r['kv_bytes_per_token']:>6} {r['tokens_per_s']:>8} "
+                  f"{r.get('decode_dispatches_per_token', float('nan')):>9} "
                   f"{r.get('ttft_p50_s', float('nan')):>9} "
                   f"{r['slot_occupancy_mean']:>10}")
+
+    if args.baseline_json:
+        # append semantics: each invocation adds one sweep, so a multi-
+        # regime baseline (e.g. benchmarks/BENCH_serve_baseline.json) is
+        # reproduced by re-running the recorded bench_args command lines
+        # against the same path
+        sweep = {"bench_args": {k: v for k, v in vars(args).items()
+                                if not k.startswith("_")},
+                 "points": reports}
+        payload = {"generated_by": "benchmarks/serve_bench.py",
+                   "arch": cfg.name, "sweeps": []}
+        if os.path.exists(args.baseline_json):
+            with open(args.baseline_json) as f:
+                payload = json.load(f)
+        payload["sweeps"].append(sweep)
+        d = os.path.dirname(args.baseline_json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.baseline_json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"== wrote {args.baseline_json} "
+              f"({len(payload['sweeps'])} sweeps)")
 
 
 if __name__ == "__main__":

@@ -32,7 +32,7 @@ from .xtramac_mac import virtual_dsp_multiply  # noqa: F401  (re-export)
 # warning instead of a silent wrong answer (DESIGN.md §10).  Packed weights
 # stream either way, so the roofline memory term is unchanged.
 # ---------------------------------------------------------------------------
-_PARTITIONED = {"value": False}
+_PARTITIONED = {"value": False, "warned": False}
 
 
 def set_under_partitioning(flag: bool) -> None:
@@ -46,13 +46,25 @@ def under_partitioning() -> bool:
     return _PARTITIONED["value"]
 
 
+def reset_downgrade_warning() -> None:
+    """Re-arm the once-per-process downgrade warning (tests)."""
+    _PARTITIONED["warned"] = False
+
+
 def kernel_allowed(use_kernel: bool) -> bool:
-    """``use_kernel``, downgraded (loudly) when partitioning is active."""
+    """``use_kernel``, downgraded when partitioning is active.  The
+    downgrade warns ONCE per process (module-level latch): mesh serving
+    loops call this on every traced step, and a warning per call would
+    spam hundreds of identical lines per second of decode."""
     if use_kernel and _PARTITIONED["value"]:
-        warnings.warn(
-            "use_kernel=True under mesh partitioning: Pallas kernels are "
-            "not GSPMD-partitionable; falling back to the jnp reference "
-            "path (same math, packed weights either way)", stacklevel=3)
+        if not _PARTITIONED["warned"]:
+            _PARTITIONED["warned"] = True
+            warnings.warn(
+                "use_kernel=True under mesh partitioning: Pallas kernels "
+                "are not GSPMD-partitionable; falling back to the jnp "
+                "reference path (same math, packed weights either way). "
+                "Further downgrades in this process stay silent.",
+                stacklevel=3)
         return False
     return use_kernel
 

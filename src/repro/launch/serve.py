@@ -33,6 +33,10 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kv-dtype", default="bf16",
                     help="KV pool storage: bf16 | int8 | fp8 (DESIGN.md §9)")
+    ap.add_argument("--max-burst", type=int, default=8,
+                    help="device-resident decode burst cap: K tokens per "
+                         "jit dispatch / host sync (1 = per-token dispatch, "
+                         "DESIGN.md §11)")
     ap.add_argument("--dp", type=int, default=1,
                     help="data-parallel mesh axis (pool slots shard here)")
     ap.add_argument("--tp", type=int, default=1,
@@ -65,7 +69,8 @@ def main():
     params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(args.seed)))
     engine = ServingEngine(cfg, params, ServeConfig(
         max_len=args.prompt_len + args.max_new,
-        temperature=args.temperature, kv_dtype=args.kv_dtype, mesh=mesh))
+        temperature=args.temperature, kv_dtype=args.kv_dtype,
+        max_burst=args.max_burst, mesh=mesh))
 
     rng = np.random.default_rng(args.seed)
     batch = {"tokens": rng.integers(
@@ -96,12 +101,22 @@ def main():
     print(f"generated {out['generated'].shape} in {dt:.2f}s "
           f"({new_tokens / dt:.1f} tok/s steady-state)")
     print("first rows:", out["generated"][:2, :8].tolist())
-    print(json.dumps({
+    report = {
         "batch": out["batch"], "prompt_len": out["prompt_len"],
         "new_tokens": new_tokens, "kv_dtype": args.kv_dtype,
         "topology": engine.topology,
         "compile_s": round(compile_s, 2), "wall_s": round(dt, 2),
-        "steady_tok_s": round(new_tokens / dt, 1)}))
+        "steady_tok_s": round(new_tokens / dt, 1)}
+    if "decode_dispatches" in out:   # scheduler families: burst accounting
+        report.update({
+            "max_burst": args.max_burst,
+            "decode_dispatches": out["decode_dispatches"],
+            "decode_dispatches_per_token": round(
+                out["decode_dispatches"] / max(new_tokens, 1), 4),
+            "host_syncs": out["host_syncs"],
+            "burst_hist": {str(k): v for k, v
+                           in sorted(out["burst_hist"].items())}})
+    print(json.dumps(report))
 
 
 if __name__ == "__main__":

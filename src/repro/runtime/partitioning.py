@@ -377,6 +377,37 @@ def serve_pool_pspec(cfg: ModelConfig, mesh: Mesh, n_slots: int, *,
                                   is_leaf=lambda x: isinstance(x, P))
 
 
+def serve_burst_pspec(mesh, n_slots: int) -> Dict[str, P]:
+    """PartitionSpecs for the decode fast-path carries that ride the slot
+    axis (DESIGN.md §11) — the non-cache inputs/outputs of the fused
+    ``decode_slots`` and ``decode_burst`` jits:
+
+      * ``row``          [n_slots]       — tokens / lengths / active mask /
+                                           remaining-budget / temperatures /
+                                           eos ids / sampled ids
+      * ``row_keys``     [n_slots, 2]    — per-row PRNG keys (single step)
+      * ``key_schedule`` [K, n_slots, 2] — the burst's precomputed
+                                           per-(request, step) key schedule;
+                                           the step axis stays local (it is
+                                           the ``lax.scan`` axis)
+      * ``burst_out``    [K, n_slots]    — stacked sampled ids / valid masks
+
+    The slot axis follows the SAME divisibility guard as
+    ``serve_pool_pspec``: it shards over the data axis iff ``n_slots``
+    divides it, so burst carries and the pool cache always agree on where
+    a slot row lives (a mismatch would resharding-copy the cache every
+    step and kill donation)."""
+    rules = rules_from_mesh(mesh, train=False)
+    dax = rules.data_axis
+    slot_ax = dax if _divides(n_slots, mesh.shape[dax]) else None
+    return {
+        "row": P(slot_ax),
+        "row_keys": P(slot_ax, None),
+        "key_schedule": P(None, slot_ax, None),
+        "burst_out": P(None, slot_ax),
+    }
+
+
 def named(mesh: Mesh, spec_tree):
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree,

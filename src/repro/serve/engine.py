@@ -3,24 +3,36 @@
 This is the system-level consumer of the paper's technique: checkpoint
 weights are stored in the per-layer mixed-precision plan (projections /
 experts in INT4/FP8/FP4/INT8 packed codes -> the XtraMAC-style MACs;
-attention in BF16), and the engine exposes three jitted steps over a
+attention in BF16), and the engine exposes jitted steps over a
 persistent cache — the per-tile "datatype control signal" of the paper's
 GEMV engine becomes the static per-layer scheme in the compiled program
 (DESIGN.md §2: JAX traces static dtypes, so runtime switching is realized
 at layer granularity, which is the granularity the paper's own workloads
 switch at).
 
-Step primitives (DESIGN.md §7):
+Step primitives (DESIGN.md §7, §11):
   * ``prefill_chunk_into_slot`` — write one fixed-size chunk of one
     request's prompt into its KV pool slot (compiles once; prompts of any
-    length are a host-side loop of chunks, the final chunk zero-padded).
+    length are a host-side loop of chunks over a once-padded prompt).
   * ``prefill_into_slots``     — convenience loop of the above over whole
     prompts; returns last-true-position logits per request.
   * ``decode_slots``           — one decode step for ALL pool slots at
     once, each row writing/attending at its own length (per-row
-    ``cache_index``).  Inactive slots ride along and are masked host-side;
-    their garbage write lands exactly where the slot's next real write
-    goes, so it is always overwritten before it could be attended.
+    ``cache_index``), with sampling FUSED into the jit: per-slot keys and
+    temperatures go in, only [n_slots] int32 token ids come out — the
+    [n_slots, vocab] logits never leave the device.  Inactive slots ride
+    along and are masked host-side; their garbage write lands exactly
+    where the slot's next real write goes, so it is always overwritten
+    before it could be attended.  (``decode_slots_with_logits`` keeps the
+    logits-returning variant for score / first-token / diagnostic paths.)
+  * ``decode_burst``           — K consecutive decode steps as ONE jitted
+    ``lax.scan``: cache (donated), tokens, lengths and per-slot stop masks
+    are threaded through the scan carry, a precomputed [K, n_slots, 2] key
+    schedule rides the scan xs, and rows that retire mid-burst (EOS /
+    max-new-tokens / capacity) freeze in place.  One dispatch and ONE host
+    sync amortize over K generated tokens (DESIGN.md §11) — the software
+    analogue of the paper's II=1 pipeline: the decode loop streams without
+    per-token host intervention.
 
 Both the continuous-batching ``Scheduler`` and the one-shot ``generate()``
 (kept as a thin wrapper: it submits every row to a private scheduler and
@@ -55,6 +67,7 @@ from repro.models import transformer as T
 from repro.models.common import QLinear
 
 from .kv_pool import KVCachePool, POOLABLE_FAMILIES, slots_for_budget
+from .sampling import sample_rows
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +81,11 @@ class ServeConfig:
     kv_dtype: Any = "bf16"
     n_slots: int = 8          # KV pool width = decode batch (static shape)
     prefill_chunk: int = 16   # chunked-prefill granularity (static shape)
+    # upper bound on the decode-burst length K (DESIGN.md §11): the
+    # scheduler plans K per round (clamped to 1 while admission or a
+    # prefill is pending) and rounds it down to a power of two, so at most
+    # log2(max_burst) burst variants ever compile.  1 disables bursts.
+    max_burst: int = 8
     # optional cache-memory budget: when set, ``new_pool()`` derives the
     # slot count from KV bytes/token instead of taking ``n_slots`` —
     # the knob that turns cache quantization into served concurrency
@@ -167,21 +185,80 @@ class ServingEngine:
                 cache, slot_cache)
             return (logits[0] if with_logits else None), cache
 
-        def decode_slots(params, tokens, cache, lengths):
-            """tokens [n_slots, 1]; row i writes/attends at lengths[i]."""
+        def decode_slots_logits(params, tokens, cache, lengths):
+            """tokens [n_slots, 1]; row i writes/attends at lengths[i].
+            Returns the full [n_slots, V] logits — the diagnostic / scoring
+            variant; the serving hot path uses the fused ``decode_slots``."""
             logits, _, cache = T.forward(mcfg, params, {"tokens": tokens},
                                          cache=cache, cache_index=lengths,
                                          mode="decode")
             return logits[:, -1], cache
 
+        def decode_slots(params, tokens, cache, lengths, keys, temps):
+            """Fused decode + sample: one step for all slots, sampling on
+            device (keys [n_slots, 2], temps [n_slots]).  Only the
+            [n_slots] int32 sampled ids cross to the host — the logits are
+            dead past ``sample_rows`` and never materialize off-device."""
+            logits, _, cache = T.forward(mcfg, params, {"tokens": tokens},
+                                         cache=cache, cache_index=lengths,
+                                         mode="decode")
+            return sample_rows(logits[:, -1], keys, temps), cache
+
+        def decode_burst(params, cache, tokens, lengths, active, rem, keys,
+                         temps, eos_ids, max_len):
+            """K consecutive fused decode steps as one ``lax.scan``
+            (DESIGN.md §11).  K is the leading dim of ``keys``
+            [K, n_slots, 2] — the per-(request, step) key schedule the host
+            precomputed from each request's ``step_key`` sequence, which is
+            what makes a burst bit-identical to K single steps.
+
+            Carry: (cache, tokens, lengths, active, rem).  Per step, active
+            rows commit their input token's KV at ``lengths`` (then advance
+            it), sample the next token, and re-evaluate their stop mask:
+              * EOS       — sampled id == eos_ids[row] (>= 0),
+              * length    — rem (tokens the row may still emit) hits 0,
+              * capacity  — the committed length would exceed the slot
+                            (mirrors the scheduler's defensive retire).
+            Frozen rows ride along exactly like inactive slots: their
+            lengths stop advancing, so their garbage writes land where the
+            slot's next real write goes.  ys = (sampled [K, n_slots],
+            was-active [K, n_slots]) — the host emits token (t, i) iff
+            valid[t, i], in step-major order, reproducing the single-step
+            emission sequence."""
+            def step(carry, step_keys):
+                cache, tokens, lengths, active, rem = carry
+                logits, _, cache = T.forward(
+                    mcfg, params, {"tokens": tokens[:, None]}, cache=cache,
+                    cache_index=lengths, mode="decode")
+                sampled = sample_rows(logits[:, -1], step_keys, temps)
+                act = active.astype(jnp.int32)
+                lengths = lengths + act
+                rem = rem - act
+                stop_eos = (eos_ids >= 0) & (sampled == eos_ids)
+                still = active & ~stop_eos & (rem > 0) \
+                    & (lengths < max_len - 1)
+                tokens = jnp.where(active, sampled, tokens)
+                return (cache, tokens, lengths, still, rem), (sampled, active)
+            (cache, _, _, _, _), (toks, valid) = jax.lax.scan(
+                step, (cache, tokens, lengths, active, rem), keys)
+            return cache, toks, valid
+
         self._prefill = prefill
         self._decode = decode
         self._prefill_chunk_fn = prefill_chunk
         self._decode_slots_fn = decode_slots
-        # single-device jits (mesh=None path; also the tracing baseline)
+        self._decode_slots_logits_fn = decode_slots_logits
+        self._decode_burst_fn = decode_burst
+        # single-device jits (mesh=None path; also the tracing baseline).
+        # The burst jit re-lowers per distinct K (the scan length is part
+        # of the traced shape); the scheduler's power-of-two K policy
+        # bounds that to log2(max_burst) variants.
         self._prefill_chunk = jax.jit(prefill_chunk, donate_argnums=(2,),
                                       static_argnums=(5,))
         self._decode_slots = jax.jit(decode_slots, donate_argnums=(2,))
+        self._decode_slots_logits = jax.jit(decode_slots_logits,
+                                            donate_argnums=(2,))
+        self._decode_burst = jax.jit(decode_burst, donate_argnums=(1,))
 
     # ------------------------------------------------------------------
     # Mesh-aware step construction (DESIGN.md §10)
@@ -213,27 +290,34 @@ class ServingEngine:
         return PT.named(self.mesh, spec)
 
     def _steps_for(self, pool: KVCachePool):
-        """(prefill_chunk, decode_slots) jits for ``pool``'s geometry.
+        """(prefill_chunk, decode_slots, decode_slots_logits, decode_burst)
+        jits for ``pool``'s geometry.
 
         Meshless: the bare jits.  Under a mesh: jits carrying explicit
         in/out shardings — cache in-sharding == out-sharding keeps donation
-        alive; tokens/lengths ride the slot (data) axis; scalars and the
-        [1, C] chunk tokens are replicated.  Cached per (n_slots, capacity,
-        kv_dtype) since the cache sharding depends on the pool shape.
+        alive; tokens / lengths / stop masks / sampled ids ride the slot
+        (data) axis; the [K, n_slots, 2] burst key schedule and the
+        [K, n_slots] burst outputs carry the slot axis at position 1
+        (``partitioning.serve_burst_pspec``); scalars and the [1, C] chunk
+        tokens are replicated.  Cached per (n_slots, capacity, kv_dtype)
+        since the cache sharding depends on the pool shape.
         """
         self._declare_partitioning()
         if self.mesh is None:
-            return self._prefill_chunk, self._decode_slots
+            return (self._prefill_chunk, self._decode_slots,
+                    self._decode_slots_logits, self._decode_burst)
         key = (pool.n_slots, pool.capacity, pool.kv_dtype)
         steps = self._sharded_steps.get(key)
         if steps is None:
+            from repro.runtime import partitioning as PT
             cache_sh = self.pool_shardings(pool)
             rep = NamedSharding(self.mesh, P())
-            # the slot axis the pool spec actually chose (divisibility
-            # guards included) — tokens/lengths must ride the same axis
-            slot_ax = jax.tree_util.tree_leaves(cache_sh)[0].spec[1]
-            tok_sh = NamedSharding(self.mesh, P(slot_ax, None))
-            len_sh = NamedSharding(self.mesh, P(slot_ax))
+            burst = PT.serve_burst_pspec(self.mesh, pool.n_slots)
+            tok_sh = NamedSharding(self.mesh, P(burst["row"][0], None))
+            len_sh = NamedSharding(self.mesh, burst["row"])
+            keys_sh = NamedSharding(self.mesh, burst["row_keys"])
+            sched_sh = NamedSharding(self.mesh, burst["key_schedule"])
+            out_sh = NamedSharding(self.mesh, burst["burst_out"])
             pc = jax.jit(
                 self._prefill_chunk_fn, donate_argnums=(2,),
                 static_argnums=(5,),
@@ -242,9 +326,20 @@ class ServingEngine:
             ds = jax.jit(
                 self._decode_slots_fn, donate_argnums=(2,),
                 in_shardings=(self._param_shardings, tok_sh, cache_sh,
+                              len_sh, keys_sh, len_sh),
+                out_shardings=(len_sh, cache_sh))
+            dl = jax.jit(
+                self._decode_slots_logits_fn, donate_argnums=(2,),
+                in_shardings=(self._param_shardings, tok_sh, cache_sh,
                               len_sh),
                 out_shardings=(None, cache_sh))
-            steps = self._sharded_steps[key] = (pc, ds)
+            db = jax.jit(
+                self._decode_burst_fn, donate_argnums=(1,),
+                in_shardings=(self._param_shardings, cache_sh, len_sh,
+                              len_sh, len_sh, len_sh, sched_sh, len_sh,
+                              len_sh, rep),
+                out_shardings=(cache_sh, out_sh, out_sh))
+            steps = self._sharded_steps[key] = (pc, ds, dl, db)
         return steps
 
     # ------------------------------------------------------------------
@@ -271,22 +366,42 @@ class ServingEngine:
             pool.place(self.pool_shardings(pool))
         return pool
 
+    def pad_prompt(self, prompt: np.ndarray):
+        """Prefill pre-pass: ONE int32 conversion + zero-pad to a whole
+        number of prefill chunks.  Returns (padded [ceil(P/C)*C], P).  The
+        per-chunk loop then slices views out of this buffer instead of
+        allocating a fresh chunk per call (host allocation churn was the
+        prefill path's per-chunk overhead)."""
+        C = self.scfg.prefill_chunk
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        n = int(prompt.size)
+        assert n > 0, "empty prompt"
+        padded = np.zeros((-(-n // C) * C,), np.int32)
+        padded[:n] = prompt
+        return padded, n
+
     def prefill_chunk_into_slot(self, pool: KVCachePool, slot: int,
-                                prompt: np.ndarray, offset: int):
+                                prompt: np.ndarray, offset: int, *,
+                                prompt_len: Optional[int] = None):
         """Write prompt[offset : offset+C] into ``slot``.  For the prompt's
         final chunk, returns the [C, V] chunk logits (pad positions carry
         garbage — callers index the true last position); earlier chunks
         return None and skip the lm-head compute entirely.  Advances
-        ``pool.lengths[slot]``."""
+        ``pool.lengths[slot]``.
+
+        With ``prompt_len`` given, ``prompt`` must already be the
+        chunk-padded buffer from ``pad_prompt`` (the scheduler pads once at
+        admission); without it, the legacy raw-prompt interface pads here.
+        """
         C = self.scfg.prefill_chunk
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
-        n = min(C, prompt.size - offset)
-        assert n > 0, (offset, prompt.size)
+        if prompt_len is None:
+            prompt, prompt_len = self.pad_prompt(prompt)
+        n = min(C, prompt_len - offset)
+        assert n > 0, (offset, prompt_len)
         assert offset + n <= pool.max_len, "prompt exceeds slot capacity"
-        chunk = np.zeros((1, C), np.int32)
-        chunk[0, :n] = prompt[offset:offset + n]
-        final = offset + n >= prompt.size
-        prefill_chunk, _ = self._steps_for(pool)
+        chunk = prompt[offset:offset + C][None]       # view, no allocation
+        final = offset + n >= prompt_len
+        prefill_chunk = self._steps_for(pool)[0]
         logits, pool.cache = prefill_chunk(
             self.params, jnp.asarray(chunk), pool.cache,
             jnp.int32(slot), jnp.int32(offset), final)
@@ -300,24 +415,81 @@ class ServingEngine:
         C = self.scfg.prefill_chunk
         out = []
         for slot, prompt in zip(slots, prompts):
-            prompt = np.asarray(prompt, np.int32).reshape(-1)
+            padded, n = self.pad_prompt(prompt)
             logits = None
-            for off in range(0, prompt.size, C):
-                logits = self.prefill_chunk_into_slot(pool, slot, prompt, off)
-            out.append(logits[(prompt.size - 1) % C])
+            for off in range(0, n, C):
+                logits = self.prefill_chunk_into_slot(pool, slot, padded,
+                                                      off, prompt_len=n)
+            out.append(logits[(n - 1) % C])
         return out
 
-    def decode_slots(self, pool: KVCachePool, tokens: np.ndarray):
-        """One decode step over every pool slot.  ``tokens`` [n_slots]; row
-        i is written at pool.lengths[i].  Returns [n_slots, V] logits.  The
-        caller commits the write by incrementing ``pool.lengths`` for the
-        rows it considers active."""
+    def decode_slots(self, pool: KVCachePool, tokens: np.ndarray,
+                     keys: Optional[np.ndarray] = None,
+                     temperatures: Optional[np.ndarray] = None) -> np.ndarray:
+        """One fused decode+sample step over every pool slot.  ``tokens``
+        [n_slots]; row i is written at pool.lengths[i].  Sampling happens
+        ON DEVICE (``keys`` [n_slots, 2] uint32 / ``temperatures``
+        [n_slots]; both default to zeros = greedy) and only the [n_slots]
+        int32 sampled ids come back — the logits never leave the device.
+        The caller commits the write by incrementing ``pool.lengths`` for
+        the rows it considers active."""
+        n = pool.n_slots
+        tokens = np.asarray(tokens, np.int32).reshape(n, 1)
+        if keys is None:
+            keys = np.zeros((n, 2), np.uint32)
+        if temperatures is None:
+            temperatures = np.zeros((n,), np.float32)
+        decode_slots = self._steps_for(pool)[1]
+        toks, pool.cache = decode_slots(
+            self.params, jnp.asarray(tokens), pool.cache,
+            jnp.asarray(pool.lengths), jnp.asarray(keys, jnp.uint32),
+            jnp.asarray(temperatures, jnp.float32))
+        return np.asarray(toks)
+
+    def decode_slots_with_logits(self, pool: KVCachePool,
+                                 tokens: np.ndarray) -> np.ndarray:
+        """The logits-returning decode variant (score / diagnostic paths):
+        same write semantics as ``decode_slots`` but returns the full
+        [n_slots, V] logits — one host transfer of the whole logit block."""
         tokens = np.asarray(tokens, np.int32).reshape(pool.n_slots, 1)
-        _, decode_slots = self._steps_for(pool)
-        logits, pool.cache = decode_slots(
+        decode_logits = self._steps_for(pool)[2]
+        logits, pool.cache = decode_logits(
             self.params, jnp.asarray(tokens), pool.cache,
             jnp.asarray(pool.lengths))
         return jax.block_until_ready(logits)
+
+    def decode_burst(self, pool: KVCachePool, tokens: np.ndarray,
+                     key_schedule: np.ndarray, temperatures: np.ndarray,
+                     active: np.ndarray, remaining: np.ndarray,
+                     eos_ids: np.ndarray):
+        """K consecutive decode steps on device — ONE dispatch, ONE host
+        sync (DESIGN.md §11).  K = key_schedule.shape[0]; row i of
+        ``key_schedule[t]`` must be request i's ``step_key`` for its
+        (n_generated + t)-th token so the burst is bit-identical to K
+        single steps.  ``active`` [n_slots] bool marks live decode rows;
+        ``remaining`` [n_slots] int32 is each row's max-new-tokens budget
+        left; ``eos_ids`` [n_slots] int32 (-1 = never).  Rows that hit a
+        stop condition freeze mid-burst (their lengths stop advancing).
+
+        Returns (tokens [K, n_slots] int32, valid [K, n_slots] bool) as
+        host arrays; token (t, i) was emitted iff valid[t, i].  Commits
+        ``pool.lengths`` for every emitted token (unlike single-step
+        ``decode_slots``, where the caller commits)."""
+        K, n = key_schedule.shape[0], pool.n_slots
+        assert key_schedule.shape == (K, n, 2), key_schedule.shape
+        tokens = np.asarray(tokens, np.int32).reshape(n)
+        decode_burst = self._steps_for(pool)[3]
+        pool.cache, toks, valid = decode_burst(
+            self.params, pool.cache, jnp.asarray(tokens),
+            jnp.asarray(pool.lengths), jnp.asarray(active, bool),
+            jnp.asarray(remaining, jnp.int32),
+            jnp.asarray(key_schedule, jnp.uint32),
+            jnp.asarray(temperatures, jnp.float32),
+            jnp.asarray(eos_ids, jnp.int32), jnp.int32(pool.max_len))
+        toks = np.asarray(toks)                       # the burst's one sync
+        valid = np.asarray(valid)
+        pool.lengths += valid.sum(axis=0).astype(np.int32)
+        return toks, valid
 
     # ------------------------------------------------------------------
     # One-shot generation (backwards-compatible wrapper)
@@ -353,9 +525,16 @@ class ServingEngine:
         for i, r in enumerate(reqs):
             gen[i, :r.n_generated] = r.output_tokens
             lengths[i] = r.n_generated
+        m = sched.metrics
         return {"generated": gen, "prompt_len": s, "batch": b,
                 "lengths": lengths,
-                "finish_reasons": [r.finish_reason for r in reqs]}
+                "finish_reasons": [r.finish_reason for r in reqs],
+                # burst accounting (DESIGN.md §11): how amortized the
+                # decode path actually ran for this generation
+                "decode_dispatches": m.decode_dispatches,
+                "decode_token_steps": m.decode_token_steps,
+                "host_syncs": sched.n_host_syncs,
+                "burst_hist": dict(m.burst_hist)}
 
     # ---- legacy static-batch loop (ssm / hybrid / audio / vlm) ---------
     def _sample(self, logits, key):

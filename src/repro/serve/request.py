@@ -52,6 +52,10 @@ class Request:
     state: RequestState = RequestState.WAITING
     slot: Optional[int] = None               # KV pool slot while admitted
     prefill_pos: int = 0                     # prompt positions in cache
+    # chunk-padded prompt buffer (engine.pad_prompt), built once at
+    # admission so the per-chunk prefill loop slices views instead of
+    # allocating per chunk
+    prompt_padded: Optional[np.ndarray] = None
     output_tokens: List[int] = dataclasses.field(default_factory=list)
     finish_reason: Optional[str] = None      # eos | length | capacity
     # --- timing (scheduler clock; see metrics.py) ---
@@ -85,3 +89,16 @@ class Request:
         base = jax.random.fold_in(jax.random.PRNGKey(self.sampling.seed),
                                   self.id or 0)
         return jax.random.fold_in(base, self.n_generated)
+
+    def step_keys(self, n: int) -> np.ndarray:
+        """[n, 2] uint32 key schedule for generated tokens
+        ``n_generated .. n_generated + n - 1`` — row t is bit-identical to
+        what ``step_key()`` would return at that step, which is the
+        on-device key-schedule contract that makes a K-step decode burst
+        reproduce K single steps exactly (DESIGN.md §11).  One vmapped
+        dispatch per (request, burst) instead of one fold_in per token."""
+        base = jax.random.fold_in(jax.random.PRNGKey(self.sampling.seed),
+                                  self.id or 0)
+        steps = jax.numpy.arange(self.n_generated, self.n_generated + n)
+        return np.asarray(
+            jax.vmap(lambda s: jax.random.fold_in(base, s))(steps))

@@ -1,7 +1,7 @@
 """Continuous-batching scheduler: FCFS admission over a slot-based KV pool.
 
 Each ``step()`` does up to three things, all against statically-shaped
-jitted engine primitives (DESIGN.md §7):
+jitted engine primitives (DESIGN.md §7, §11):
 
   1. **Admission** — FCFS: while a KV slot is free, the oldest WAITING
      request checks one out and enters PREFILL.  Requests can join at any
@@ -11,9 +11,17 @@ jitted engine primitives (DESIGN.md §7):
      prompt never stalls in-flight decodes for more than a chunk).  When
      the prompt completes, its first token is sampled from the chunk
      logits — that token is the request's TTFT event.
-  3. **One decode batch** — every DECODE-state slot advances one token in
-     a single [n_slots] batched step.  Inactive slots ride along (static
-     shapes) and are ignored host-side.
+  3. **One decode round** — every DECODE-state slot advances.  The round is
+     a planned **burst** of K token-steps executed as one jitted
+     ``lax.scan`` on device (K = 1 falls back to the fused single step):
+     one dispatch and one host sync per K generated tokens instead of per
+     token.  K is the min over active slots of tokens-until-that-slot's
+     next scheduling event (length/capacity retirement), clamped to 1
+     whenever the waiting queue is non-empty or a prefill is mid-flight —
+     so admission latency and chunked-prefill interleaving are byte-
+     identical to a burst-free scheduler — and rounded down to a power of
+     two so at most log2(max_burst) burst lengths ever compile.  EOS cannot
+     be planned for; rows that sample it freeze mid-burst on device.
 
 Retirement (EOS / max-new-tokens / slot capacity) frees the slot
 immediately, so the next ``step()`` can admit a waiting request into it —
@@ -32,8 +40,10 @@ Determinism: sampling keys are per (request, step) — see request.py — and
 row computations are independent of batch composition (dense ops are
 row-wise; MoE decode routes each row as its own drop-free single-token
 group), so a request's greedy output is identical whether it was served
-alone, in a full one-shot batch, or admitted mid-flight next to strangers.
-The clock is injectable for metric tests.
+alone, in a full one-shot batch, admitted mid-flight next to strangers, or
+advanced K tokens at a time inside a burst.  The clock is injectable for
+metric tests.  Burst timing caveat: all K tokens of a burst surface at
+burst end, so their ``token_times`` are burst-granular (see metrics.py).
 """
 from __future__ import annotations
 
@@ -41,38 +51,19 @@ import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .kv_pool import KVCachePool
 from .metrics import ServeMetrics
 from .request import Request, RequestState, SamplingParams  # noqa: F401
-
-
-@jax.jit
-def _sample_tokens(logits, keys, temperatures):
-    """Batched per-row sampling: logits [N, V], keys [N, 2], temps [N].
-    Greedy when a row's temperature <= 0, else temperature-scaled
-    categorical.  One dispatch + one host transfer for the whole decode
-    batch instead of N round-trips on the serving hot path (the single
-    first-token sample reuses this with N=1 so there is exactly one
-    sampling rule)."""
-    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    t = jnp.maximum(temperatures, jnp.float32(1e-6))[:, None]
-    sampled = jax.vmap(jax.random.categorical)(keys, logits / t)
-    return jnp.where(temperatures <= 0, greedy, sampled.astype(jnp.int32))
-
-
-def _sample_one(logits, key, temperature) -> int:
-    return int(_sample_tokens(
-        logits[None], jnp.asarray(key)[None],
-        jnp.asarray([temperature], jnp.float32))[0])
+from .sampling import (batched_step_keys, sample_one,  # noqa: F401
+                       sample_tokens)
 
 
 class Scheduler:
     def __init__(self, engine, *, pool: Optional[KVCachePool] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 max_burst: Optional[int] = None):
         self.engine = engine
         if pool is None:
             pool = engine.new_pool()
@@ -89,6 +80,10 @@ class Scheduler:
                     f"chunk {C} (need >= {need}); build it with "
                     f"engine.new_pool() or KVCachePool(..., align={C})")
         self.pool = pool
+        # burst cap: ServeConfig.max_burst unless overridden per scheduler
+        self.max_burst = int(getattr(engine.scfg, "max_burst", 1)
+                             if max_burst is None else max_burst)
+        assert self.max_burst >= 1
         self.waiting: Deque[Request] = deque()
         self.running: Dict[int, Request] = {}      # slot -> Request
         self.finished: List[Request] = []
@@ -99,7 +94,21 @@ class Scheduler:
         self._clock = clock
         self._next_id = 0
         self.n_steps = 0
-        self.n_decode_steps = 0
+        # device->host blocking transfers on the serving hot path: final
+        # prefill-chunk logits, the first-token sample, one per decode
+        # dispatch, and one per key-schedule build (temperature rows,
+        # batched across rows)
+        self.n_host_syncs = 0
+
+    @property
+    def n_decode_steps(self) -> int:
+        """Decode TOKEN-steps executed (a burst adds its planned K)."""
+        return self.metrics.decode_token_steps
+
+    @property
+    def n_decode_dispatches(self) -> int:
+        """Jitted decode/burst entries (one per decode round)."""
+        return self.metrics.decode_dispatches
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> Request:
@@ -131,6 +140,30 @@ class Scheduler:
         return self.pool.bytes_per_token
 
     # ------------------------------------------------------------------
+    def _plan_burst(self, dec: List[Request]) -> int:
+        """Burst length K for this round (DESIGN.md §11).
+
+        K = min over the decode rows of the tokens that row can still emit
+        before a *predictable* scheduling event — its max-new-tokens budget
+        or its slot-capacity horizon — capped by ``max_burst`` and rounded
+        DOWN to a power of two (bounds compiled burst variants; correctness
+        never depends on the plan, only efficiency).  Clamped to 1 whenever
+        admission could happen next round (waiting queue non-empty) or a
+        prefill is mid-flight, so burst mode changes neither admission
+        latency nor prefill/decode interleaving.  EOS is unplannable and is
+        handled by the on-device stop masks instead."""
+        if self.max_burst <= 1 or self.waiting:
+            return 1
+        if any(r.state is RequestState.PREFILL
+               for r in self.running.values()):
+            return 1
+        k = self.max_burst
+        for r in dec:
+            budget = r.sampling.max_new_tokens - r.n_generated
+            capacity = self.pool.max_len - int(self.pool.lengths[r.slot]) - 1
+            k = min(k, max(1, min(budget, capacity)))
+        return 1 << (k.bit_length() - 1)   # largest power of two <= k
+
     def step(self) -> Dict[str, List]:
         """One scheduling round.  Returns the tokens emitted this round
         (``emitted``: list of (request, slot, token)) and requests retired
@@ -144,6 +177,10 @@ class Scheduler:
             req.slot = self.pool.alloc()
             req.state = RequestState.PREFILL
             req.prefill_pos = 0
+            # one-time prompt pre-pass: int32 + chunk padding hoisted out
+            # of the per-chunk loop (engine slices views from this buffer)
+            if req.prompt_padded is None:
+                req.prompt_padded, _ = self.engine.pad_prompt(req.prompt)
             self.running[req.slot] = req
 
         # 2. one prefill chunk for the oldest mid-prefill request
@@ -152,39 +189,101 @@ class Scheduler:
         if pre:
             req = min(pre, key=lambda r: r.id)
             chunk_logits = self.engine.prefill_chunk_into_slot(
-                self.pool, req.slot, req.prompt, req.prefill_pos)
+                self.pool, req.slot, req.prompt_padded, req.prefill_pos,
+                prompt_len=req.prompt_len)
             C = self.engine.scfg.prefill_chunk
             req.prefill_pos = min(req.prefill_pos + C, req.prompt_len)
             if req.prefill_pos >= req.prompt_len:
                 req.state = RequestState.DECODE
-                tok = _sample_one(chunk_logits[(req.prompt_len - 1) % C],
-                                  req.step_key(), req.sampling.temperature)
+                # two blocking transfers: the final-chunk logits and the
+                # sampled first token
+                self.n_host_syncs += 2
+                tok = sample_one(chunk_logits[(req.prompt_len - 1) % C],
+                                 req.step_key(), req.sampling.temperature)
                 self._emit(req, tok, emitted, finished_now)
 
-        # 3. one decode batch over every DECODE slot
+        # 3. one decode round (burst of K token-steps) over DECODE slots
         dec = sorted((r for r in self.running.values()
                       if r.state is RequestState.DECODE), key=lambda r: r.id)
         if dec:
-            n = self.pool.n_slots
-            tokens = np.zeros((n,), np.int32)
-            keys = np.zeros((n, 2), np.uint32)       # inactive rows: key 0
-            temps = np.zeros((n,), np.float32)
-            for r in dec:
-                tokens[r.slot] = r.last_token
-                keys[r.slot] = np.asarray(r.step_key())
-                temps[r.slot] = r.sampling.temperature
-            logits = self.engine.decode_slots(self.pool, tokens)
-            self.n_decode_steps += 1
-            toks = np.asarray(_sample_tokens(logits, jnp.asarray(keys),
-                                             jnp.asarray(temps)))
-            for r in dec:
-                # the input token's KV was just written at lengths[slot]
-                self.pool.lengths[r.slot] += 1
-                self._emit(r, int(toks[r.slot]), emitted, finished_now)
+            k = self._plan_burst(dec)
+            if k <= 1:
+                self._decode_single(dec, emitted, finished_now)
+            else:
+                self._decode_burst(dec, k, emitted, finished_now)
 
         self.n_steps += 1
         self.metrics.on_step(self._clock(), self.pool.n_used)
         return {"emitted": emitted, "finished": finished_now}
+
+    def _key_schedule(self, dec: List[Request], k: int,
+                      keys: np.ndarray, temps: np.ndarray) -> None:
+        """Fill the [k, n_slots, 2] ``keys`` schedule and [n_slots]
+        ``temps`` for the temperature rows of ``dec`` — ONE batched
+        computation and ONE blocking transfer for the whole round
+        (greedy rows keep key 0; their key is never consumed)."""
+        trows = [r for r in dec if r.sampling.temperature > 0]
+        if not trows:
+            return
+        sched = batched_step_keys(
+            [r.sampling.seed for r in trows], [r.id or 0 for r in trows],
+            [r.n_generated for r in trows], k)          # [R, k, 2]
+        self.n_host_syncs += 1
+        for r, row in zip(trows, sched):
+            temps[r.slot] = r.sampling.temperature
+            keys[:, r.slot] = row
+
+    def _decode_single(self, dec: List[Request], emitted: List,
+                       finished_now: List[Request]) -> None:
+        """K = 1: one fused decode+sample step (sampling still on device —
+        only [n_slots] token ids cross to the host)."""
+        n = self.pool.n_slots
+        tokens = np.zeros((n,), np.int32)
+        keys = np.zeros((1, n, 2), np.uint32)    # inactive rows: key 0
+        temps = np.zeros((n,), np.float32)
+        for r in dec:
+            tokens[r.slot] = r.last_token
+        self._key_schedule(dec, 1, keys, temps)
+        toks = self.engine.decode_slots(self.pool, tokens, keys[0], temps)
+        self.n_host_syncs += 1
+        self.metrics.on_decode_burst(1, len(dec))
+        for r in dec:
+            # the input token's KV was just written at lengths[slot]
+            self.pool.lengths[r.slot] += 1
+            self._emit(r, int(toks[r.slot]), emitted, finished_now)
+
+    def _decode_burst(self, dec: List[Request], k: int, emitted: List,
+                      finished_now: List[Request]) -> None:
+        """K > 1: one device-resident burst.  Emission replays the device's
+        step-major order host-side, so `_emit` bookkeeping (retirement,
+        slot free, metrics) sees exactly the sequence K single steps would
+        have produced."""
+        n = self.pool.n_slots
+        tokens = np.zeros((n,), np.int32)
+        temps = np.zeros((n,), np.float32)
+        eos = np.full((n,), -1, np.int32)
+        active = np.zeros((n,), bool)
+        rem = np.zeros((n,), np.int32)
+        keys = np.zeros((k, n, 2), np.uint32)
+        for r in dec:
+            tokens[r.slot] = r.last_token
+            eos[r.slot] = r.sampling.eos_id
+            active[r.slot] = True
+            rem[r.slot] = r.sampling.max_new_tokens - r.n_generated
+        self._key_schedule(dec, k, keys, temps)
+        toks, valid = self.engine.decode_burst(
+            self.pool, tokens, keys, temps, active, rem, eos)
+        self.n_host_syncs += 1
+        self.metrics.on_decode_burst(k, int(valid.sum()))
+        # slots are captured before emission: _emit may retire a request
+        # mid-replay (clearing req.slot), but its already-emitted burst
+        # tokens are still addressed by the slot it occupied on device
+        rows = [(r, r.slot) for r in dec]
+        for t in range(k):
+            for r, slot in rows:
+                if valid[t, slot]:
+                    # engine.decode_burst already committed pool.lengths
+                    self._emit(r, int(toks[t, slot]), emitted, finished_now)
 
     def run(self, max_steps: Optional[int] = None) -> None:
         """Step until every submitted request is FINISHED."""
@@ -211,7 +310,8 @@ class Scheduler:
             self._retire(req, "length", now, finished_now)
         elif req.prompt_len + req.n_generated >= self.pool.max_len:
             # defensive: submit() bounds prompt+max_new, so this only fires
-            # for requests constructed around the validation
+            # for requests constructed around the validation.  The device
+            # burst mirrors this exact condition in its stop mask.
             self._retire(req, "capacity", now, finished_now)
 
     def _retire(self, req: Request, reason: str, now: float,

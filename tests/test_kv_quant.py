@@ -236,7 +236,7 @@ def test_engine_decode_logits_kernel_vs_einsum(kv_dtype):
             toks = np.zeros((pool.n_slots,), np.int32)
             for s, l in zip(slots, last):
                 toks[s] = int(np.argmax(np.asarray(l)))
-            return np.asarray(eng.decode_slots(pool, toks),
+            return np.asarray(eng.decode_slots_with_logits(pool, toks),
                               np.float32)[:len(prompts)], toks
         finally:
             set_use_kernel(False)
