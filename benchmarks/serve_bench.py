@@ -22,8 +22,12 @@ produced exactly that way:
     python benchmarks/serve_bench.py --kv-dtype bf16,int8 --requests 6 \
         --rate 1 --seed 6 --max-new 33 --max-burst 8 \
         --baseline-json benchmarks/BENCH_serve_baseline.json
-    # ... then the same line with --max-burst 1, and the contended pair
-    # (--requests 8 --rate 3 --seed 0) at --max-burst 8 and 1.
+    # ... then the same line with --max-burst 1, the contended pair
+    # (--requests 8 --rate 3 --seed 0) at --max-burst 8 and 1, and the
+    # mixed-tier capacity sweep (DESIGN.md §12):
+    python benchmarks/serve_bench.py --tiers bf16,int8 --d-head 128 \
+        --cache-budget-mb 1 --requests 8 --rate 2 --seed 0 --max-new 16 \
+        --max-burst 8 --baseline-json benchmarks/BENCH_serve_baseline.json
 
 ``--max-burst`` caps the device-resident decode burst (DESIGN.md §11);
 each point reports ``decode_dispatches_per_token``, ``host_syncs_per_token``
@@ -32,6 +36,18 @@ measures the dispatch/sync amortization directly — pool geometry is a pure
 function of the workload shape, identical across burst caps.  Warmup
 compiles the whole power-of-two burst ladder off the clock (one throwaway
 request per reachable burst length), so the timed run is steady-state.
+
+``--tiers bf16,int8`` switches to MIXED-TIER mode (DESIGN.md §12): ONE
+engine serves every named KV tier concurrently — one pool per tier
+(budget-derived slots per tier with ``--cache-budget-mb``), requests
+assigned tiers round-robin via ``Request.kv_policy``, decode batches
+cohorted per tier by the scheduler.  The point reports per-tier slot
+counts and ``tier_slot_ratio_vs_bf16`` — at ``--d-head 128`` (the paper
+models' head dim; smoke configs default to 16) the int8 tier fits ~1.94x
+the bf16 slots from the same budget, served from the same engine.
+``--policy policy.json`` drives the engine from a serialized
+``PrecisionPolicy`` instead of the legacy flags (which keep working and
+print their policy equivalent).
 
 Smoke (CPU, ~1 min incl. compile):
     python benchmarks/serve_bench.py
@@ -44,6 +60,9 @@ Quantized-cache sweep at a fixed budget:
 Sharded sweep on forced host devices (DESIGN.md §10):
     python benchmarks/serve_bench.py --dp 2 --tp 4 --force-host-devices 8 \
         --kv-dtype int8 --out-dir bench_out
+Mixed-tier serving from one engine (DESIGN.md §12):
+    python benchmarks/serve_bench.py --tiers bf16,int8 --d-head 128 \
+        --cache-budget-mb 1 --out-dir bench_out
 """
 import argparse
 import json
@@ -61,9 +80,17 @@ import numpy as np
 from repro.launch.cli import force_host_devices, serving_mesh
 
 
-def build_engine(args, cfg, params, kv_dtype, mesh):
+def build_engine(args, cfg, params, kv_dtype, mesh, policy=None):
+    import dataclasses
+
+    from repro.quant.policy import PrecisionPolicy
     from repro.serve import ServeConfig, ServingEngine
     budget = int(args.cache_budget_mb * 1e6) if args.cache_budget_mb else None
+    if policy is None:
+        policy = PrecisionPolicy.from_legacy(kv_dtype=kv_dtype)
+    elif policy.kv != kv_dtype:
+        # --policy + a --kv-dtype sweep: each point re-tiers the policy
+        policy = dataclasses.replace(policy, kv=kv_dtype)
     # NOTE: pool geometry (max_len, and any budget-derived slot count) is a
     # pure function of the workload shape — NOT of --max-burst — so sweep
     # points at different burst caps measure dispatch amortization against
@@ -71,9 +98,11 @@ def build_engine(args, cfg, params, kv_dtype, mesh):
     scfg = ServeConfig(max_len=args.prompt_len + args.max_new,
                        temperature=args.temperature,
                        n_slots=args.n_slots, prefill_chunk=args.chunk,
-                       kv_dtype=kv_dtype, cache_budget_bytes=budget,
-                       max_burst=args.max_burst, mesh=mesh)
-    return ServingEngine(cfg, params, scfg)
+                       cache_budget_bytes=budget,
+                       max_burst=args.max_burst, mesh=mesh, policy=policy)
+    engine = ServingEngine(cfg, params, scfg)
+    print(f"== precision policy: {engine.policy.to_json()}")
+    return engine
 
 
 def make_workload(args, vocab):
@@ -88,7 +117,7 @@ def make_workload(args, vocab):
     return arrivals, prompts
 
 
-def warmup(engine, prompts, max_new):
+def warmup(engine, prompts, max_new, tiers=None):
     """Compile the chunk/decode/burst steps off the clock so the first
     request's TTFT measures scheduling, not XLA.
 
@@ -97,34 +126,39 @@ def warmup(engine, prompts, max_new):
     prefill-sampled first token is max_new - 1), so one throwaway request
     per such K — with max_new = K + 1, whose lone burst is planned exactly
     K — compiles the complete ladder without touching the engine's pool
-    geometry."""
+    geometry.  With ``tiers`` the ladder runs once per KV tier (each tier
+    is its own compiled step set, keyed per pool in the engine)."""
     from repro.serve import Request, SamplingParams, Scheduler
-    sched = Scheduler(engine)
+    sched = Scheduler(engine, tiers=tiers)
     top = min(engine.scfg.max_burst, max(max_new - 1, 1))
     ladder = [1 << i for i in range(top.bit_length()) if (1 << i) <= top]
     for k in ladder:
-        sched.submit(Request(prompt=prompts[0],
-                             sampling=SamplingParams(
-                                 temperature=engine.scfg.temperature,
-                                 max_new_tokens=k + 1)))
-        sched.run(max_steps=200)
+        for tier in (tiers or [None]):
+            sched.submit(Request(prompt=prompts[0], kv_policy=tier,
+                                 sampling=SamplingParams(
+                                     temperature=engine.scfg.temperature,
+                                     max_new_tokens=k + 1)))
+            sched.run(max_steps=200)
 
 
-def run_point(args, cfg, engine, kv_dtype):
-    """One sweep point: the seeded workload at one pool dtype."""
+def run_point(args, cfg, engine, kv_dtype, tiers=None):
+    """One sweep point: the seeded workload at one pool dtype — or, with
+    ``tiers``, the MIXED-TIER workload: one engine, one pool per KV tier,
+    requests assigned tiers round-robin (``Request.kv_policy``) so
+    bf16/int8/fp8 traffic interleaves, mid-flight admission included."""
     from repro.serve import Request, SamplingParams, Scheduler
     arrivals, prompts = make_workload(args, cfg.vocab)
     if not args.no_warmup:
         t0 = time.monotonic()
-        warmup(engine, prompts, args.max_new)
+        warmup(engine, prompts, args.max_new, tiers=tiers)
         print(f"== warmup (compile) {time.monotonic() - t0:.1f}s")
 
-    sched = Scheduler(engine)
-    pool = sched.pool
-    print(f"== pool[{kv_dtype}]: {pool.n_slots} slots x {pool.max_len} "
-          f"positions; {pool.bytes_per_token} B/token, "
-          f"{pool.cache_bytes / 1e6:.2f} MB cache; prefill chunk "
-          f"{args.chunk}; {args.requests} requests @ ~{args.rate}/s")
+    sched = Scheduler(engine, tiers=tiers)
+    for tier, pool in sorted(sched.pools.items()):
+        print(f"== pool[{tier}]: {pool.n_slots} slots x {pool.max_len} "
+              f"positions; {pool.bytes_per_token} B/token, "
+              f"{pool.cache_bytes / 1e6:.2f} MB cache; prefill chunk "
+              f"{args.chunk}; {args.requests} requests @ ~{args.rate}/s")
     reqs = []
     admitted_after_first_decode = 0
     i = 0
@@ -136,6 +170,7 @@ def run_point(args, cfg, engine, kv_dtype):
                 admitted_after_first_decode += 1
             reqs.append(sched.submit(Request(
                 prompt=prompts[i],
+                kv_policy=tiers[i % len(tiers)] if tiers else None,
                 sampling=SamplingParams(temperature=args.temperature,
                                         max_new_tokens=args.max_new,
                                         seed=args.seed))))
@@ -146,21 +181,43 @@ def run_point(args, cfg, engine, kv_dtype):
             time.sleep(min(float(arrivals[i]) - now, 0.01))
 
     assert all(r.is_finished for r in reqs)
-    print(f"\n{'req':>4} {'arrive':>7} {'P':>4} {'new':>4} {'ttft_s':>7} "
-          f"{'e2e_s':>7}  reason")
+    print(f"\n{'req':>4} {'arrive':>7} {'tier':>5} {'P':>4} {'new':>4} "
+          f"{'ttft_s':>7} {'e2e_s':>7}  reason")
     for a, r in zip(arrivals, reqs):
-        print(f"{r.id:>4} {a:>7.2f} {r.prompt_len:>4} {r.n_generated:>4} "
+        print(f"{r.id:>4} {a:>7.2f} {r.tier:>5} {r.prompt_len:>4} "
+              f"{r.n_generated:>4} "
               f"{r.first_token_time - r.arrival_time:>7.3f} "
               f"{r.finish_time - r.arrival_time:>7.3f}  {r.finish_reason}")
 
+    pool = sched.pool
     rep = sched.metrics.report()
     rep["scheduler_steps"] = sched.n_steps
     rep["decode_steps"] = sched.n_decode_steps
     rep["admitted_mid_flight"] = admitted_after_first_decode
-    rep["kv_dtype"] = kv_dtype
-    rep["n_slots"] = pool.n_slots
-    rep["kv_bytes_per_token"] = pool.bytes_per_token
-    rep["kv_cache_mb"] = round(pool.cache_bytes / 1e6, 3)
+    rep["kv_dtype"] = "+".join(tiers) if tiers else kv_dtype
+    rep["n_slots"] = sum(p.n_slots for p in sched.pools.values())
+    if not tiers:
+        # scalar bytes/token is only meaningful for a single-tier pool;
+        # mixed points carry tier_bytes_per_token instead
+        rep["kv_bytes_per_token"] = pool.bytes_per_token
+    rep["kv_cache_mb"] = round(
+        sum(p.cache_bytes for p in sched.pools.values()) / 1e6, 3)
+    if tiers:
+        # the mixed-tier capacity story (DESIGN.md §12): per-tier slot
+        # counts from ONE engine's budget — the int8/fp8 tiers fit ~1.9-2x
+        # the bf16 slots at d_head=128, served concurrently
+        rep["tier_slots"] = {t: p.n_slots
+                             for t, p in sorted(sched.pools.items())}
+        rep["tier_bytes_per_token"] = {
+            t: p.bytes_per_token for t, p in sorted(sched.pools.items())}
+        rep["tier_new_tokens"] = {
+            t: sum(r.n_generated for r in reqs if r.tier == t)
+            for t in sorted(sched.pools)}
+        if "bf16" in sched.pools:
+            base = sched.pools["bf16"].n_slots
+            rep["tier_slot_ratio_vs_bf16"] = {
+                t: round(p.n_slots / base, 4)
+                for t, p in sorted(sched.pools.items())}
     # burst amortization (DESIGN.md §11): dispatches / host syncs per token
     # (decode_dispatches_per_token and burst_hist come from the metrics
     # report itself)
@@ -194,8 +251,25 @@ def main():
                     help="write {args, points} for the whole sweep here")
     ap.add_argument("--kv-dtype", default="bf16",
                     help="comma-separated pool dtypes to sweep: bf16,fp8,int8")
+    ap.add_argument("--tiers", default=None,
+                    help="comma-separated KV tiers served CONCURRENTLY from "
+                         "one engine (e.g. bf16,int8): requests are "
+                         "assigned tiers round-robin via Request.kv_policy "
+                         "(DESIGN.md §12).  One mixed point instead of a "
+                         "per-dtype sweep")
+    ap.add_argument("--policy", default=None, metavar="POLICY_JSON",
+                    help="path to a PrecisionPolicy JSON for the engine "
+                         "(weight patterns + kv tier + kernel); legacy "
+                         "flags keep working and print their policy "
+                         "equivalent")
+    ap.add_argument("--d-head", type=int, default=None,
+                    help="override the config's head dim (e.g. 128 to run "
+                         "the paper-scale KV geometry on a smoke-depth "
+                         "model: the int8-vs-bf16 bytes/token ratio is "
+                         "2*d/(d+4), so capacity claims need d_head=128)")
     ap.add_argument("--cache-budget-mb", type=float, default=None,
-                    help="derive n_slots from this cache budget per dtype")
+                    help="derive n_slots from this cache budget per dtype "
+                         "(per tier in --tiers mode)")
     ap.add_argument("--out-dir", default=None,
                     help="write one JSON per sweep point here")
     ap.add_argument("--dp", type=int, default=1,
@@ -215,22 +289,43 @@ def main():
     mesh = serving_mesh(args.dp, args.tp)
 
     cfg = get_config(args.arch, smoke=not args.full)
+    if args.d_head:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, d_head=args.d_head)
     print(f"== {cfg.name}: {cfg.n_layers}L d={cfg.d_model} ({cfg.family}); "
           f"schemes proj={cfg.scheme_proj} ffn={cfg.scheme_ffn}"
+          + (f"; d_head={cfg.head_dim}" if args.d_head else "")
           + (f"; mesh dp={args.dp} x tp={args.tp}" if mesh is not None else ""))
     params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(0)))
 
+    policy = None
+    if args.policy:
+        from repro.quant.policy import PrecisionPolicy
+        with open(args.policy) as f:
+            policy = PrecisionPolicy.from_json(f.read())
+
+    tiers = [t.strip() for t in args.tiers.split(",") if t.strip()] \
+        if args.tiers else None
+    if tiers:
+        sweep = [tiers[0]]               # one mixed point, default tier first
+    elif policy is not None and args.kv_dtype == "bf16":
+        sweep = [policy.kv]              # the policy's tier, unless swept
+    else:
+        sweep = [d.strip() for d in args.kv_dtype.split(",") if d.strip()]
+
     reports = []
-    for kv_dtype in [d.strip() for d in args.kv_dtype.split(",") if d.strip()]:
-        engine = build_engine(args, cfg, params, kv_dtype, mesh)
-        rep = run_point(args, cfg, engine, kv_dtype)
-        print(f"\n== serving metrics [{kv_dtype}]")
+    for kv_dtype in sweep:
+        engine = build_engine(args, cfg, params, kv_dtype, mesh, policy)
+        rep = run_point(args, cfg, engine, kv_dtype, tiers=tiers)
+        label = "+".join(tiers) if tiers else kv_dtype
+        print(f"\n== serving metrics [{label}]")
         print(json.dumps(rep, indent=2))
         if args.out_dir:
             os.makedirs(args.out_dir, exist_ok=True)
             path = os.path.join(
                 args.out_dir,
-                f"serve_{cfg.name}_{kv_dtype}_burst{args.max_burst}.json")
+                f"serve_{cfg.name}_{label.replace('+', '-')}"
+                f"_burst{args.max_burst}.json")
             with open(path, "w") as f:
                 json.dump(rep, f, indent=2)
             print(f"== wrote {path}")

@@ -8,3 +8,17 @@ numerics and host-device counts).
 import os
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _rearm_kernel_downgrade_warning():
+    """The Pallas-under-partitioning downgrade warns once per PROCESS
+    (``kernels/ops.py`` latch) — without a per-test reset, whichever test
+    first triggers the downgrade consumes the warning and any later test
+    asserting on it fails depending on collection order.  Re-arm the
+    latch before every test so warn-assertions are order-independent."""
+    from repro.kernels.ops import reset_downgrade_warning
+    reset_downgrade_warning()
+    yield

@@ -8,7 +8,13 @@ retire as soon as they hit EOS or their token budget — freeing the slot for
 the next request.  Uses the reduced qwen3-moe config so it runs on the CPU
 container in ~a minute; pass --arch/--full to scale up.
 
+The precision configuration is ONE ``PrecisionPolicy`` (DESIGN.md §12);
+``--tiers bf16,int8`` serves BOTH KV tiers concurrently from the same
+engine, requests alternating tiers via ``Request.kv_policy`` — runtime
+per-request precision switching.
+
 Run:  python examples/serve_mixed_precision.py [--kv-dtype int8]
+      python examples/serve_mixed_precision.py --tiers bf16,int8
 (the script puts src/ on sys.path itself — no PYTHONPATH needed)
 """
 import argparse
@@ -24,8 +30,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.models.common import QuantMaker
 from repro.models import transformer as T
-from repro.serve import Request, SamplingParams, ServeConfig, ServingEngine, \
-    Scheduler
+from repro.serve import PrecisionPolicy, Request, SamplingParams, \
+    ServeConfig, ServingEngine, Scheduler
 
 
 def checkpoint_bytes(params):
@@ -57,7 +63,12 @@ def main():
     ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--kv-dtype", default="bf16",
                     choices=["bf16", "int8", "fp8"],
-                    help="KV pool storage (int8/fp8: quantize-on-write)")
+                    help="default KV tier (int8/fp8: quantize-on-write)")
+    ap.add_argument("--tiers", default=None,
+                    help="comma-separated KV tiers served concurrently "
+                         "(e.g. bf16,int8): requests alternate tiers via "
+                         "Request.kv_policy — per-request runtime "
+                         "precision switching (DESIGN.md §12)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=not args.full)
@@ -70,14 +81,21 @@ def main():
     print(f"checkpoint bytes: {pb/1e6:.2f} MB packed "
           f"(bf16-dense equivalent {de/1e6:.2f} MB -> {de/pb:.2f}x smaller)")
 
+    # ONE declarative precision contract: weight schemes come from the
+    # config (the policy could override them by name pattern), the KV
+    # tier is the serving default, requests may switch tiers at runtime
+    policy = PrecisionPolicy(kv=args.kv_dtype)
     engine = ServingEngine(cfg, params, ServeConfig(
         max_len=args.prompt_len + args.max_new,
         n_slots=args.n_slots, prefill_chunk=args.chunk,
-        kv_dtype=args.kv_dtype))
-    sched = Scheduler(engine)
-    print(f"KV pool: {sched.pool.n_slots} slots x {sched.pool.max_len} "
-          f"positions @ {args.kv_dtype} = {sched.pool.bytes_per_token} "
-          f"B/token ({sched.pool.cache_bytes / 1e6:.2f} MB)")
+        policy=policy))
+    print(f"precision policy: {engine.policy.to_json()}")
+    tiers = [t.strip() for t in args.tiers.split(",")] if args.tiers else None
+    sched = Scheduler(engine, tiers=tiers)
+    for tier, pool in sorted(sched.pools.items()):
+        print(f"KV pool[{tier}]: {pool.n_slots} slots x {pool.max_len} "
+              f"positions = {pool.bytes_per_token} "
+              f"B/token ({pool.cache_bytes / 1e6:.2f} MB)")
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(1, cfg.vocab,
@@ -87,12 +105,17 @@ def main():
 
     # Stagger arrivals: half up front, the rest trickle in while the first
     # wave is mid-decode — continuous batching in one screenful.
+    def tier_of(i):
+        return tiers[i % len(tiers)] if tiers else None
+
     t0 = time.time()
     pending = list(enumerate(prompts))
     for i, p in pending[: args.requests // 2]:
-        sched.submit(Request(prompt=p, sampling=SamplingParams(
-            max_new_tokens=args.max_new)))
-        print(f"[submit] req {i} (prompt {len(p)} tok)")
+        sched.submit(Request(prompt=p, kv_policy=tier_of(i),
+                             sampling=SamplingParams(
+                                 max_new_tokens=args.max_new)))
+        print(f"[submit] req {i} (prompt {len(p)} tok"
+              + (f", tier {tier_of(i)}" if tiers else "") + ")")
     pending = pending[args.requests // 2:]
 
     while sched.has_work or pending:
@@ -101,9 +124,11 @@ def main():
         # spinning (e.g. --requests 1 submits nothing up front)
         if pending and (sched.n_decode_steps >= 2 or not sched.has_work):
             i, p = pending.pop(0)
-            sched.submit(Request(prompt=p, sampling=SamplingParams(
-                max_new_tokens=args.max_new)))
-            print(f"[submit] req {i} mid-flight (prompt {len(p)} tok)")
+            sched.submit(Request(prompt=p, kv_policy=tier_of(i),
+                                 sampling=SamplingParams(
+                                     max_new_tokens=args.max_new)))
+            print(f"[submit] req {i} mid-flight (prompt {len(p)} tok"
+                  + (f", tier {tier_of(i)}" if tiers else "") + ")")
         events = sched.step()
         for req, slot, tok in events["emitted"]:
             tag = " (first)" if req.n_generated == 1 else ""

@@ -2,14 +2,36 @@
 
 ``quantized_matmul`` is the single dispatch the model layer calls: it picks
 the kernel (or the pure-jnp reference path) from the layer's quantization
-scheme.  ``use_kernel=False`` (default on CPU / under pjit partitioning)
-runs the mathematically-identical jnp path — packed weights either way, so
-HBM traffic (the roofline memory term) is the same; the Pallas path is the
-TPU-target fast path validated under interpret=True.
+scheme plus the active *execution policy*.  The jnp path is mathematically
+identical — packed weights either way, so HBM traffic (the roofline memory
+term) is the same; the Pallas path is the TPU-target fast path validated
+under interpret=True.
+
+Execution policy (DESIGN.md §12).  Dispatch is driven by ONE module-level
+execution record instead of the two historical booleans
+(``models.common.set_use_kernel`` / ``set_under_partitioning``):
+
+    _EXEC = {mode: 'jnp'|'pallas', partitioned: bool}
+
+``declare_execution(kernel=..., partitioned=...)`` is the single writer —
+drivers resolve a ``PrecisionPolicy.kernel`` ('auto' leaves the mode
+untouched; 'jnp'/'pallas' pin it) and declare their mesh before tracing.
+``active_kernel()`` is the single trace-time reader, with the mesh
+downgrade folded in: the Pallas kernels index global array shapes and are
+not GSPMD-partitionable — traced under a multi-device mesh they would run
+per shard against shard-local views (wrong shapes, wrong results), so
+``partitioned=True`` downgrades 'pallas' to the jnp path with a loud
+warning (once per process; mesh decode loops would otherwise spam one
+warning per traced step) instead of a silent wrong answer (DESIGN.md §10).
+
+``set_use_kernel`` (models/common.py) and ``set_under_partitioning`` /
+``kernel_allowed`` below survive as thin deprecation shims over
+``declare_execution`` / ``active_kernel`` — no serve-path code calls them.
 """
 from __future__ import annotations
 
 import warnings
+from typing import Optional
 
 import jax.numpy as jnp
 
@@ -21,44 +43,47 @@ from .decode_attention import gqa_decode_attention  # noqa: F401  (re-export)
 from .packed_matmul import packed_gemv, packed_matmul, w8a8_matmul
 from .xtramac_mac import virtual_dsp_multiply  # noqa: F401  (re-export)
 
-
-# ---------------------------------------------------------------------------
-# Partitioning guard.  The Pallas kernels index global array shapes and are
-# not GSPMD-partitionable: traced under a multi-device mesh they would be
-# replicated per shard against shard-local views — wrong shapes, wrong
-# results.  Drivers that trace steps under a mesh (serve engine,
-# launch/steps cells) declare it here, and ``kernel_allowed`` downgrades
-# ``use_kernel=True`` to the mathematically-identical jnp path with a loud
-# warning instead of a silent wrong answer (DESIGN.md §10).  Packed weights
-# stream either way, so the roofline memory term is unchanged.
-# ---------------------------------------------------------------------------
-_PARTITIONED = {"value": False, "warned": False}
+_EXEC = {"mode": "jnp", "partitioned": False, "warned": False}
 
 
-def set_under_partitioning(flag: bool) -> None:
-    """Declare that model steps are (or are no longer) traced under a
-    multi-device mesh.  Global, like ``set_use_kernel`` — the two toggles
-    compose via ``kernel_allowed``."""
-    _PARTITIONED["value"] = bool(flag)
+def declare_execution(*, kernel: Optional[str] = None,
+                      partitioned: Optional[bool] = None) -> None:
+    """Declare the execution context for subsequent traces.
+
+    ``kernel``: 'jnp' | 'pallas' pin the dispatch mode; 'auto' / None
+    leave it as-is (the backend default — today the jnp reference path
+    unless a driver pinned 'pallas').  ``partitioned``: whether model
+    steps are traced under a multi-device mesh; None leaves it as-is.
+    """
+    if kernel in ("jnp", "pallas"):
+        _EXEC["mode"] = kernel
+    elif kernel not in (None, "auto"):
+        raise ValueError(
+            f"kernel={kernel!r}; valid: 'auto', 'jnp', 'pallas'")
+    if partitioned is not None:
+        _EXEC["partitioned"] = bool(partitioned)
+
+
+def kernel_mode() -> str:
+    return _EXEC["mode"]
 
 
 def under_partitioning() -> bool:
-    return _PARTITIONED["value"]
+    return _EXEC["partitioned"]
 
 
 def reset_downgrade_warning() -> None:
     """Re-arm the once-per-process downgrade warning (tests)."""
-    _PARTITIONED["warned"] = False
+    _EXEC["warned"] = False
 
 
 def kernel_allowed(use_kernel: bool) -> bool:
-    """``use_kernel``, downgraded when partitioning is active.  The
-    downgrade warns ONCE per process (module-level latch): mesh serving
-    loops call this on every traced step, and a warning per call would
-    spam hundreds of identical lines per second of decode."""
-    if use_kernel and _PARTITIONED["value"]:
-        if not _PARTITIONED["warned"]:
-            _PARTITIONED["warned"] = True
+    """``use_kernel``, downgraded when partitioning is active — the mesh
+    guard applied to an explicit kernel request.  Warns ONCE per process
+    (module-level latch)."""
+    if use_kernel and _EXEC["partitioned"]:
+        if not _EXEC["warned"]:
+            _EXEC["warned"] = True
             warnings.warn(
                 "use_kernel=True under mesh partitioning: Pallas kernels "
                 "are not GSPMD-partitionable; falling back to the jnp "
@@ -69,17 +94,33 @@ def kernel_allowed(use_kernel: bool) -> bool:
     return use_kernel
 
 
-def quantized_matmul(x, qw: QuantizedLinearWeights, *, use_kernel: bool = False,
+def active_kernel() -> bool:
+    """The trace-time kernel decision: Pallas iff the declared mode is
+    'pallas' AND no multi-device mesh is active (downgrade folded in)."""
+    return kernel_allowed(_EXEC["mode"] == "pallas")
+
+
+# --- deprecation shim (pre-policy API; serve path no longer calls it) ------
+def set_under_partitioning(flag: bool) -> None:
+    """Deprecated: use ``declare_execution(partitioned=...)``."""
+    declare_execution(partitioned=flag)
+
+
+def quantized_matmul(x, qw: QuantizedLinearWeights, *,
+                     use_kernel: Optional[bool] = None,
                      interpret: bool = True, out_dtype=jnp.bfloat16):
     """x [..., K] @ quantized W [K, N] -> [..., N] in ``out_dtype``.
 
-    Scheme dispatch (paper Table I):
+    ``use_kernel=None`` (the model layer's call) dispatches on the active
+    execution policy; an explicit bool overrides the mode but still takes
+    the mesh downgrade.  Scheme dispatch (paper Table I):
       awq_int4 / mxfp4 : INTx/FP4 x BF16 -> packed sub-byte kernel
       fp8              : FP8 weights (per-channel scale) -> packed kernel
       w8a8             : INT8 x INT8 -> INT32 (activations quantized here)
       bf16             : dense bf16 matmul (attention-path MACs)
     """
-    use_kernel = kernel_allowed(use_kernel)
+    use_kernel = active_kernel() if use_kernel is None \
+        else kernel_allowed(use_kernel)
     scheme = qw.scheme
     lead = x.shape[:-1]
     k = x.shape[-1]

@@ -32,7 +32,12 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kv-dtype", default="bf16",
-                    help="KV pool storage: bf16 | int8 | fp8 (DESIGN.md §9)")
+                    help="KV pool storage: bf16 | int8 | fp8 (DESIGN.md §9; "
+                         "legacy adapter — the canonical knob is --policy)")
+    ap.add_argument("--policy", default=None, metavar="POLICY_JSON",
+                    help="path to a PrecisionPolicy JSON (DESIGN.md §12): "
+                         "weight-scheme patterns, KV tier and kernel mode "
+                         "as one artifact; overrides --kv-dtype")
     ap.add_argument("--max-burst", type=int, default=8,
                     help="device-resident decode burst cap: K tokens per "
                          "jit dispatch / host sync (1 = per-token dispatch, "
@@ -58,19 +63,30 @@ def main():
     from repro.models import transformer as T
     from repro.serve import ServeConfig, ServingEngine
 
+    from repro.quant.policy import PrecisionPolicy
+
     cfg = get_config(args.arch, smoke=args.smoke)
     mesh = serving_mesh(args.dp, args.tp)
     if mesh is not None:
         print(f"mesh: dp={args.dp} x tp={args.tp} over "
               f"{jax.devices()[0].platform}")
 
+    if args.policy:
+        with open(args.policy) as f:
+            policy = PrecisionPolicy.from_json(f.read())
+    else:
+        # legacy flags keep working as a thin adapter: they emit the
+        # equivalent policy (printed below so the flag set is migratable)
+        policy = PrecisionPolicy.from_legacy(kv_dtype=args.kv_dtype)
+
     print(f"building {cfg.name} with quantized weights "
           f"(proj={cfg.scheme_proj}, ffn={cfg.scheme_ffn})")
     params = T.build_params(cfg, QuantMaker(jax.random.PRNGKey(args.seed)))
     engine = ServingEngine(cfg, params, ServeConfig(
         max_len=args.prompt_len + args.max_new,
-        temperature=args.temperature, kv_dtype=args.kv_dtype,
+        temperature=args.temperature, policy=policy,
         max_burst=args.max_burst, mesh=mesh))
+    print(f"precision policy: {engine.policy.to_json()}")
 
     rng = np.random.default_rng(args.seed)
     batch = {"tokens": rng.integers(
@@ -103,7 +119,8 @@ def main():
     print("first rows:", out["generated"][:2, :8].tolist())
     report = {
         "batch": out["batch"], "prompt_len": out["prompt_len"],
-        "new_tokens": new_tokens, "kv_dtype": args.kv_dtype,
+        "new_tokens": new_tokens, "kv_dtype": engine.scfg.kv_dtype,
+        "policy": engine.policy.to_dict(),
         "topology": engine.topology,
         "compile_s": round(compile_s, 2), "wall_s": round(dt, 2),
         "steady_tok_s": round(new_tokens / dt, 1)}

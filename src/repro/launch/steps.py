@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.shapes import ShapeSpec, input_specs
-from repro.kernels.ops import set_under_partitioning
+from repro.kernels.ops import declare_execution
 from repro.models.common import AbstractMaker, set_activation_shardings
 from repro.models import transformer as T
 from repro.optim import AdamWConfig, adamw_init, adamw_update
@@ -36,7 +36,7 @@ def _declare_on_trace(fn, mesh: Mesh):
 
     @functools.wraps(fn)
     def wrapped(*args):
-        set_under_partitioning(partitioned)
+        declare_execution(partitioned=partitioned)
         return fn(*args)
     return wrapped
 

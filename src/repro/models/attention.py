@@ -8,8 +8,9 @@ Two execution modes, chosen by query length:
   * **Dense split-KV** (decode, Sq == 1): one einsum over the full KV length
     so the KV sequence axis can be sharded (flash-decode style); GSPMD turns
     the softmax/contraction over the sharded axis into the partial-softmax +
-    all-reduce combine pattern.  With ``set_use_kernel(True)`` the GQA
-    decode branch instead runs the fused Pallas flash-decode kernel
+    all-reduce combine pattern.  With the execution policy pinned to
+    ``kernel='pallas'`` (``PrecisionPolicy`` / ``ops.declare_execution``)
+    the GQA decode branch instead runs the fused Pallas flash-decode kernel
     (``kernels/decode_attention.py``): packed KV blocks stream out of the
     pool and dequantize in-kernel; the einsum path here is kept as the
     interpret-mode oracle (DESIGN.md §9).
@@ -36,7 +37,7 @@ from repro.quant.kv_cache import (cache_read, cache_write_rows,
                                   kv_slab_spec)
 from repro.quant.schemes import get_kv_scheme
 
-from .common import (_USE_KERNEL, Maker, apply_linear, apply_rope, rms_norm,
+from .common import (Maker, apply_linear, apply_rope, rms_norm,
                      shard_act)
 
 _NEG = -1e30  # -inf stand-in that keeps exp() NaN-free on fully-masked rows
@@ -244,8 +245,8 @@ def gqa_forward(params, cfg: AttnConfig, x, *, positions=None,
         k_cache, v_cache = new_cache
         valid = jnp.broadcast_to(
             jnp.asarray(cache_index + s, jnp.int32), (b,))
-        from repro.kernels.ops import kernel_allowed
-        if s == 1 and cfg.causal and kernel_allowed(_USE_KERNEL["value"]):
+        from repro.kernels.ops import active_kernel
+        if s == 1 and cfg.causal and active_kernel():
             # fused flash-decode: streams (packed) KV blocks straight from
             # the pool slab, dequantizes in-kernel, no [B,S,H,D] copy
             from repro.kernels.decode_attention import gqa_decode_attention

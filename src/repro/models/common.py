@@ -49,12 +49,11 @@ class QLinear:
         return f"QLinear({self.scheme_name}, {self.shape})"
 
 
-# global switch: Pallas kernels (interpret on CPU) vs pure-jnp reference path
-_USE_KERNEL = {"value": False}
-
-
 def set_use_kernel(flag: bool) -> None:
-    _USE_KERNEL["value"] = flag
+    """Deprecated shim: kernel selection is part of the execution policy
+    (``kernels.ops.declare_execution`` / ``PrecisionPolicy.kernel``)."""
+    from repro.kernels.ops import declare_execution
+    declare_execution(kernel="pallas" if flag else "jnp")
 
 
 # ---------------------------------------------------------------------------
@@ -115,8 +114,9 @@ def apply_linear(leaf, x, out_dtype=jnp.bfloat16):
         qw = QuantizedLinearWeights(
             get_scheme(leaf.scheme_name), leaf.packed, leaf.scales, leaf.shape
         )
-        return quantized_matmul(x, qw, use_kernel=_USE_KERNEL["value"],
-                                out_dtype=out_dtype)
+        # use_kernel=None: dispatch on the active execution policy
+        # (kernels.ops.declare_execution), mesh downgrade folded in
+        return quantized_matmul(x, qw, out_dtype=out_dtype)
     return jnp.dot(x.astype(leaf.dtype), leaf).astype(out_dtype)
 
 

@@ -1,10 +1,15 @@
 """Quantization substrate: schemes (Table I), sub-byte packing, calibration,
-and quantized KV-cache storage (DESIGN.md §9)."""
+quantized KV-cache storage (DESIGN.md §9), and the unified PrecisionPolicy
+contract over all of them (DESIGN.md §12)."""
 from .kv_cache import (  # noqa: F401
     QuantizedKV, cache_read, cache_write_rows, cache_write_slice,
     kv_dtype_name, kv_slab_spec,
 )
 from .pack import codes_per_word, pack_codes, pack_codes_np, unpack_codes  # noqa: F401
+from .policy import (  # noqa: F401
+    KERNEL_MODES, KV_TIERS, PrecisionPolicy, leaf_dims, leaf_info,
+    leaf_schemes, validate_kv_tier,
+)
 from .schemes import (  # noqa: F401
     KV_SCHEMES, SCHEMES, KVQuantScheme, QuantScheme, QuantizedLinearWeights,
     decode_codes, dequant_lut, dequantize, get_kv_scheme, get_scheme,

@@ -230,13 +230,21 @@ def _stack_axes(cfg: ModelConfig, rules: AxisRules, name: str,
 
 def param_specs(cfg: ModelConfig, mesh: Mesh, *, train: bool,
                 quantize: Optional[bool] = None,
-                plan: Optional[Dict[str, str]] = None):
+                plan: Optional[Dict[str, str]] = None,
+                policy=None):
     """PartitionSpec tree matching build_params' structure exactly.
 
     ``plan``: the same per-name scheme overrides given to ``QuantMaker`` —
     specs must be built with the plan the checkpoint was built with, or the
     two trees diverge wherever the plan flips a leaf between dense and
-    packed."""
+    packed.  ``policy``: a ``quant.policy.PrecisionPolicy`` — the unified
+    spelling of the same contract (DESIGN.md §12); its resolved plan is
+    used, so shardings derive from the single datatype-adaptive object the
+    checkpoint and the serving engine share.  Give one or the other."""
+    if policy is not None:
+        if plan is not None:
+            raise ValueError("give either plan= or policy=, not both")
+        plan = policy.resolved_plan(cfg)
     rules = rules_from_mesh(mesh, train=train)
     sizes = _collect_dim_sizes(cfg, plan)
     if rules.fsdp_axis is not None:
@@ -341,7 +349,10 @@ def cache_pspec(cfg: ModelConfig, rules: AxisRules, batch_size: int,
 def serve_pool_pspec(cfg: ModelConfig, mesh: Mesh, n_slots: int, *,
                      kv_dtype="bf16"):
     """PartitionSpecs for the serving KV pool tree
-    ``[L, n_slots, capacity, ...]`` (DESIGN.md §10).
+    ``[L, n_slots, capacity, ...]`` (DESIGN.md §10).  ``kv_dtype`` is the
+    pool's KV tier — the per-pool component of the ``PrecisionPolicy``
+    (DESIGN.md §12): the engine passes ``pool.kv_dtype``, which may be a
+    per-request tier rather than the policy's default.
 
     Contract (differs from ``cache_pspec``, which serves the static
     one-shot shapes):

@@ -1,3 +1,5 @@
+from repro.quant.policy import PrecisionPolicy
+
 from .engine import SCHEDULABLE_FAMILIES, ServeConfig, ServingEngine
 from .kv_pool import KVCachePool, bytes_per_slot, slots_for_budget
 from .metrics import ServeMetrics
@@ -5,7 +7,7 @@ from .request import Request, RequestState, SamplingParams
 from .scheduler import Scheduler
 
 __all__ = [
-    "KVCachePool", "Request", "RequestState", "SamplingParams",
-    "SCHEDULABLE_FAMILIES", "Scheduler", "ServeConfig", "ServeMetrics",
-    "ServingEngine", "bytes_per_slot", "slots_for_budget",
+    "KVCachePool", "PrecisionPolicy", "Request", "RequestState",
+    "SamplingParams", "SCHEDULABLE_FAMILIES", "Scheduler", "ServeConfig",
+    "ServeMetrics", "ServingEngine", "bytes_per_slot", "slots_for_budget",
 ]

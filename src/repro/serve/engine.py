@@ -52,6 +52,19 @@ The scheduler stays host-side and byte-identical: it sees the same
 alloc/free/lengths interface whether the slab under it lives on one chip
 or thirty-two.  Buffer donation survives because the cache's in- and
 out-shardings are pinned equal.
+
+**Precision policy / runtime tiers** (DESIGN.md §12): the engine's whole
+precision configuration is ONE ``quant.policy.PrecisionPolicy``
+(``ServeConfig(policy=...)``; legacy ``kv_dtype=`` / ``plan=`` are thin
+adapters emitting the equivalent policy, bit-identity pinned) — weight
+schemes resolve the param shardings, ``policy.kv`` is the default KV
+tier, ``policy.kernel`` drives kernel dispatch via
+``kernels.ops.declare_execution``.  Every step primitive takes the pool
+it operates on, and ``new_pool(kv_dtype=...)`` builds pools at any tier,
+so one engine serves bf16/fp8/int8-KV traffic concurrently: compiled
+steps are cached per ``(n_slots, capacity, tier)`` and the scheduler
+cohorts decode batches per tier — the software analogue of XtraMAC's
+runtime datatype switch.
 """
 from __future__ import annotations
 
@@ -65,6 +78,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import transformer as T
 from repro.models.common import QLinear
+from repro.quant.policy import PrecisionPolicy, validate_kv_tier
 
 from .kv_pool import KVCachePool, POOLABLE_FAMILIES, slots_for_budget
 from .sampling import sample_rows
@@ -75,10 +89,14 @@ class ServeConfig:
     max_len: int = 512        # per-slot KV capacity (prompt + new tokens)
     temperature: float = 0.0
     eos_id: int = -1          # -1: never stop early
-    # pool storage dtype: 'bf16' (or a jnp dtype) for plain slabs, 'int8' /
-    # 'fp8' for quantized packed-codes + scales slabs (DESIGN.md §9) —
-    # quantize-on-write happens inside the jitted prefill/decode steps
-    kv_dtype: Any = "bf16"
+    # LEGACY adapter for the pool storage dtype: 'bf16' (or jnp.bfloat16)
+    # for plain slabs, 'int8' / 'fp8' for quantized packed-codes + scales
+    # slabs (DESIGN.md §9).  The canonical spelling is ``policy=``; giving
+    # kv_dtype emits the equivalent policy (bit-identity pinned), and
+    # after construction this field always reads the policy's canonical
+    # tier name.  Unknown names — and raw dtypes no tier can honor —
+    # raise HERE, not at first pool build.
+    kv_dtype: Any = None
     n_slots: int = 8          # KV pool width = decode batch (static shape)
     prefill_chunk: int = 16   # chunked-prefill granularity (static shape)
     # upper bound on the decode-burst length K (DESIGN.md §11): the
@@ -87,12 +105,34 @@ class ServeConfig:
     # log2(max_burst) burst variants ever compile.  1 disables bursts.
     max_burst: int = 8
     # optional cache-memory budget: when set, ``new_pool()`` derives the
-    # slot count from KV bytes/token instead of taking ``n_slots`` —
-    # the knob that turns cache quantization into served concurrency
+    # slot count from KV bytes/token at the pool's tier instead of taking
+    # ``n_slots`` — the knob that turns cache quantization into served
+    # concurrency
     cache_budget_bytes: Optional[int] = None
     # optional jax.sharding.Mesh ('data' x 'model' axes): shard params and
     # the KV pool across it (DESIGN.md §10).  None = single-device jits.
     mesh: Any = None
+    # the unified precision contract (DESIGN.md §12): weight schemes, the
+    # default KV tier and kernel dispatch as ONE declarative object.  None
+    # derives a policy from the legacy knobs above.
+    policy: Optional[PrecisionPolicy] = None
+
+    def __post_init__(self):
+        pol = self.policy
+        if isinstance(pol, dict):
+            pol = PrecisionPolicy.from_dict(pol)
+        if pol is None:
+            # legacy adapter: kv_dtype -> the equivalent policy.  Eager:
+            # an unknown tier name raises at ServeConfig construction.
+            pol = PrecisionPolicy.from_legacy(kv_dtype=self.kv_dtype)
+        elif self.kv_dtype is not None \
+                and validate_kv_tier(self.kv_dtype) != pol.kv:
+            raise ValueError(
+                f"ServeConfig: kv_dtype={self.kv_dtype!r} contradicts "
+                f"policy.kv={pol.kv!r} — drop kv_dtype (the policy is "
+                "the single source of truth)")
+        object.__setattr__(self, "policy", pol)
+        object.__setattr__(self, "kv_dtype", pol.kv)
 
 
 def _has_qlinear(params) -> bool:
@@ -113,34 +153,45 @@ SCHEDULABLE_FAMILIES = ("dense", "moe")
 class ServingEngine:
     def __init__(self, cfg: T.ModelConfig, params, serve_cfg: ServeConfig, *,
                  plan: Optional[Dict[str, str]] = None):
-        """``plan``: the per-name scheme overrides the checkpoint was built
-        with (QuantMaker plan) — required under a mesh iff non-empty, so the
-        sharding spec tree matches the parameter tree leaf for leaf."""
+        """``plan``: LEGACY adapter for the per-name scheme overrides the
+        checkpoint was built with (QuantMaker plan) — folded into the
+        serve config's ``PrecisionPolicy`` as exact-name patterns, so the
+        sharding spec tree matches the parameter tree leaf for leaf.  The
+        canonical spelling is ``ServeConfig(policy=...)``."""
         self.cfg = cfg
         self.scfg = serve_cfg
         self.mesh = serve_cfg.mesh
-        self._plan = dict(plan or {})
+        # the engine's effective precision contract: serve-config policy
+        # with any legacy plan folded in, validated EAGERLY against the
+        # model config and mesh (unknown schemes, group/K mismatches,
+        # quantized-KV-on-MLA, pallas-under-mesh all raise here — not at
+        # first pool build or first trace)
+        self.policy = serve_cfg.policy.with_plan(plan or {}) \
+            .validate_for(cfg, self.mesh)
+        self._plan = self.policy.resolved_plan(cfg)
         self._param_shardings = None
-        self._sharded_steps: Dict = {}   # (n_slots, capacity, kv_dtype) -> jits
+        self._sharded_steps: Dict = {}   # (n_slots, capacity, tier) -> jits
 
         # Pallas kernels are not GSPMD-partitionable (kernels/ops.py): the
-        # guard flag is declared before every step call (not just here) so
-        # lazily-traced jits always see THIS engine's mesh, regardless of
-        # what other engines were constructed in between
+        # execution policy is declared before every step call (not just
+        # here) so lazily-traced jits always see THIS engine's kernel mode
+        # and mesh, regardless of what other engines were constructed in
+        # between
         self._partitioned = self.mesh is not None and self.mesh.size > 1
         if self.mesh is not None:
             from repro.runtime import partitioning as PT
-            self._declare_partitioning()
+            self._declare_execution()
             pspec = PT.param_specs(cfg, self.mesh, train=False,
                                    quantize=_has_qlinear(params),
-                                   plan=self._plan or None)
+                                   plan=self._plan)
             if jax.tree_util.tree_structure(params) != \
                     jax.tree_util.tree_structure(
                         pspec, is_leaf=lambda x: isinstance(x, P)):
                 raise ValueError(
                     "parameter tree does not match its sharding spec tree — "
                     "params built with a QuantMaker plan must pass the same "
-                    "plan to ServingEngine(..., plan=...)")
+                    "plan to ServingEngine(..., plan=...) or declare it in "
+                    "ServeConfig(policy=...) weight patterns")
             self._param_shardings = PT.named(self.mesh, pspec)
             params = jax.device_put(params, self._param_shardings)
         self.params = params
@@ -263,12 +314,17 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # Mesh-aware step construction (DESIGN.md §10)
     # ------------------------------------------------------------------
-    def _declare_partitioning(self) -> None:
-        """Sync the global kernel guard to this engine's mesh.  Called
-        before every step invocation: jits trace on their first call, and
-        the kernel-vs-jnp decision is baked in at trace time."""
-        from repro.kernels.ops import set_under_partitioning
-        set_under_partitioning(self._partitioned)
+    def _declare_execution(self) -> None:
+        """Declare this engine's execution policy (kernel mode + mesh) to
+        ``kernels.ops``.  Called before every step invocation: jits trace
+        on their first call, and the kernel-vs-jnp decision is baked in at
+        trace time.  ``kernel='auto'`` leaves the process kernel mode
+        untouched (backend default / whatever a driver pinned); 'jnp' and
+        'pallas' pin it — with the mesh downgrade folded into dispatch."""
+        from repro.kernels.ops import declare_execution
+        declare_execution(
+            kernel=None if self.policy.kernel == "auto" else self.policy.kernel,
+            partitioned=self._partitioned)
 
     @property
     def topology(self) -> Optional[Dict[str, int]]:
@@ -281,7 +337,8 @@ class ServingEngine:
 
     def pool_shardings(self, pool: KVCachePool):
         """NamedSharding tree for ``pool``'s cache under this engine's
-        mesh (None when meshless)."""
+        mesh (None when meshless).  Derived from the pool's KV tier — the
+        per-pool component of the precision policy."""
         if self.mesh is None:
             return None
         from repro.runtime import partitioning as PT
@@ -299,10 +356,16 @@ class ServingEngine:
         (data) axis; the [K, n_slots, 2] burst key schedule and the
         [K, n_slots] burst outputs carry the slot axis at position 1
         (``partitioning.serve_burst_pspec``); scalars and the [1, C] chunk
-        tokens are replicated.  Cached per (n_slots, capacity, kv_dtype)
-        since the cache sharding depends on the pool shape.
+        tokens are replicated.  Cached per ``(n_slots, capacity, tier)`` —
+        the pool-varying components of the precision policy — so ONE
+        engine holds compiled step sets for several KV tiers at once and
+        per-request tier switching never recompiles a tier it has already
+        served (DESIGN.md §12).  (Meshless, the bare jits below do the
+        same thing through jax.jit's own signature cache: a bf16 slab and
+        a packed int8 slab are different pytree structures, hence
+        different compiled specializations of one wrapper.)
         """
-        self._declare_partitioning()
+        self._declare_execution()
         if self.mesh is None:
             return (self._prefill_chunk, self._decode_slots,
                     self._decode_slots_logits, self._decode_burst)
@@ -346,21 +409,27 @@ class ServingEngine:
     # Pool-based step primitives (the scheduler's interface)
     # ------------------------------------------------------------------
     def new_pool(self, n_slots: Optional[int] = None,
-                 max_len: Optional[int] = None) -> KVCachePool:
-        """Build the slot pool.  With ``cache_budget_bytes`` set, the slot
-        count is derived from KV bytes/token at ``kv_dtype`` — an int8/fp8
-        pool fits ~2x the slots of bf16 in the same budget."""
+                 max_len: Optional[int] = None,
+                 kv_dtype: Optional[str] = None) -> KVCachePool:
+        """Build a slot pool at KV tier ``kv_dtype`` (default: the
+        policy's tier).  With ``cache_budget_bytes`` set, the slot count
+        is derived from KV bytes/token at the pool's tier — an int8/fp8
+        pool fits ~2x the slots of bf16 in the same budget, which is what
+        makes per-request tier switching a capacity lever (one engine can
+        hold one pool per tier; see Scheduler ``tiers=``)."""
+        tier = self.scfg.kv_dtype if kv_dtype is None \
+            else validate_kv_tier(kv_dtype, self.cfg)
         max_len = max_len or self.scfg.max_len
         if n_slots is None:
             if self.scfg.cache_budget_bytes is not None:
                 n_slots = slots_for_budget(
                     self.cfg, max_len, self.scfg.cache_budget_bytes,
-                    kv_dtype=self.scfg.kv_dtype,
+                    kv_dtype=tier,
                     align=self.scfg.prefill_chunk)
             else:
                 n_slots = self.scfg.n_slots
         pool = KVCachePool(self.cfg, n_slots, max_len,
-                           kv_dtype=self.scfg.kv_dtype,
+                           kv_dtype=tier,
                            align=self.scfg.prefill_chunk)
         if self.mesh is not None:
             pool.place(self.pool_shardings(pool))
@@ -544,7 +613,7 @@ class ServingEngine:
             key, logits / self.scfg.temperature).astype(jnp.int32)
 
     def _generate_legacy(self, batch, max_new_tokens: int, seed: int):
-        self._declare_partitioning()
+        self._declare_execution()
         cfg, scfg = self.cfg, self.scfg
         tokens = jnp.asarray(batch["tokens"], jnp.int32)
         b, s = tokens.shape
@@ -589,7 +658,7 @@ class ServingEngine:
 
     def score(self, batch: Dict) -> np.ndarray:
         """Teacher-forced mean NLL per row (serving-quality check)."""
-        self._declare_partitioning()
+        self._declare_execution()
         logits, _, _ = T.forward(self.cfg, self.params, batch, mode="train")
         if self.cfg.family == "vlm":
             logits = logits[:, self.cfg.n_patches:]

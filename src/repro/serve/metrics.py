@@ -41,6 +41,10 @@ class ServeMetrics:
         # {'n_devices', 'dp', 'tp'} when serving under a mesh (set by the
         # scheduler from engine.topology); None for single-device serving
         self.topology: Optional[Dict] = None
+        # {tier: n_slots} when the scheduler serves multiple KV precision
+        # tiers from one engine (DESIGN.md §12); None for single-tier —
+        # ``n_slots`` above is always the total across tiers
+        self.tiers: Optional[Dict[str, int]] = None
         self.ttft: List[float] = []
         self.itl: List[float] = []
         self.e2e: List[float] = []            # per-request total latency
@@ -112,6 +116,8 @@ class ServeMetrics:
         }
         if self.topology is not None:
             out["topology"] = dict(self.topology)
+        if self.tiers is not None:
+            out["tiers"] = dict(self.tiers)
         if self.decode_dispatches:
             out["decode_dispatches"] = self.decode_dispatches
             out["decode_token_steps"] = self.decode_token_steps

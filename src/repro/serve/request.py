@@ -50,6 +50,15 @@ class Request:
     sampling: SamplingParams = SamplingParams()
     id: Optional[int] = None                 # assigned by the scheduler
     state: RequestState = RequestState.WAITING
+    # requested KV-cache precision tier ('bf16' | 'int8' | 'fp8'; None =
+    # the engine's default tier).  The scheduler routes the request to its
+    # tier's pool and cohorts decode batches per tier (DESIGN.md §12) —
+    # per-request runtime precision switching.  A request's tokens are a
+    # pure function of (seed, id, prompt, weights, tier): tiers share
+    # weights but never a cache slab, so traffic at other tiers cannot
+    # perturb this request's continuation.
+    kv_policy: Optional[str] = None
+    tier: Optional[str] = None               # resolved at submit()
     slot: Optional[int] = None               # KV pool slot while admitted
     prefill_pos: int = 0                     # prompt positions in cache
     # chunk-padded prompt buffer (engine.pad_prompt), built once at

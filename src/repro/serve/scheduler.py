@@ -1,23 +1,28 @@
-"""Continuous-batching scheduler: FCFS admission over a slot-based KV pool.
+"""Continuous-batching scheduler: FCFS admission over slot-based KV pools.
 
 Each ``step()`` does up to three things, all against statically-shaped
 jitted engine primitives (DESIGN.md §7, §11):
 
-  1. **Admission** — FCFS: while a KV slot is free, the oldest WAITING
-     request checks one out and enters PREFILL.  Requests can join at any
-     time, including mid-flight between decode steps.
+  1. **Admission** — FCFS per tier: the waiting queue is scanned in
+     arrival order and a request is admitted as soon as a KV slot is free
+     in *its tier's* pool.  Requests can join at any time, including
+     mid-flight between decode steps.  With one tier (the default) this is
+     exactly head-of-queue FCFS.
   2. **One prefill chunk** — the oldest PREFILL request advances by one
      fixed-size chunk (chunked prefill *interleaved* with decode, so a long
      prompt never stalls in-flight decodes for more than a chunk).  When
      the prompt completes, its first token is sampled from the chunk
      logits — that token is the request's TTFT event.
-  3. **One decode round** — every DECODE-state slot advances.  The round is
-     a planned **burst** of K token-steps executed as one jitted
+  3. **One decode round per tier** — every DECODE-state slot advances.
+     Rows are cohorted by KV tier (each tier owns one pool, and a decode
+     dispatch operates on one pool), so a mixed bf16/int8/fp8 workload
+     issues one dispatch per active tier per round.  Each cohort's round
+     is a planned **burst** of K token-steps executed as one jitted
      ``lax.scan`` on device (K = 1 falls back to the fused single step):
      one dispatch and one host sync per K generated tokens instead of per
-     token.  K is the min over active slots of tokens-until-that-slot's
-     next scheduling event (length/capacity retirement), clamped to 1
-     whenever the waiting queue is non-empty or a prefill is mid-flight —
+     token.  K is the min over the cohort's slots of tokens-until-that-
+     slot's next scheduling event (length/capacity retirement), clamped to
+     1 whenever the waiting queue is non-empty or a prefill is mid-flight —
      so admission latency and chunked-prefill interleaving are byte-
      identical to a burst-free scheduler — and rounded down to a power of
      two so at most log2(max_burst) burst lengths ever compile.  EOS cannot
@@ -28,28 +33,34 @@ immediately, so the next ``step()`` can admit a waiting request into it —
 finished rows never burn decode steps, which is precisely what the old
 static-batch ``generate()`` got wrong.
 
-Concurrency is capped by the pool, and the pool is capped by KV bytes per
-token: with a quantized pool (``ServeConfig.kv_dtype`` = 'int8'/'fp8' and a
-``cache_budget_bytes``) the same cache memory admits roughly twice the
-slots, which is the whole point of extending the mixed-precision plan to
-the KV side (DESIGN.md §9).  The scheduler itself is storage-agnostic — it
-sees alloc/free/lengths, and quantization is per (position, head), so a
-request's committed cache bytes never depend on what shared its batches.
+**Precision tiers** (DESIGN.md §12): ``Scheduler(engine, tiers=...)``
+builds one pool per KV tier ('bf16' / 'int8' / 'fp8') and requests pick
+theirs via ``Request.kv_policy`` — per-request runtime precision
+switching inside one engine.  Concurrency is capped per pool, and each
+pool is capped by KV bytes per token at ITS tier: with a
+``cache_budget_bytes`` the int8/fp8 tiers admit roughly twice the slots
+of the bf16 tier from the same budget (DESIGN.md §9), so the tier knob
+is a per-request quality/capacity trade served from one engine.  The
+scheduling logic itself is storage-agnostic — it sees alloc/free/lengths
+per pool, and a request's computation touches only its own tier's slab,
+so traffic at other tiers cannot perturb its tokens.
 
 Determinism: sampling keys are per (request, step) — see request.py — and
 row computations are independent of batch composition (dense ops are
 row-wise; MoE decode routes each row as its own drop-free single-token
 group), so a request's greedy output is identical whether it was served
-alone, in a full one-shot batch, admitted mid-flight next to strangers, or
-advanced K tokens at a time inside a burst.  The clock is injectable for
-metric tests.  Burst timing caveat: all K tokens of a burst surface at
-burst end, so their ``token_times`` are burst-granular (see metrics.py).
+alone, in a full one-shot batch, admitted mid-flight next to strangers,
+advanced K tokens at a time inside a burst, or cohorted beside other
+tiers.  The clock is injectable for metric tests.  Burst timing caveat:
+all K tokens of a burst surface at burst end, so their ``token_times``
+are burst-granular (see metrics.py).
 """
 from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Mapping, Optional, Sequence, \
+    Tuple, Union
 
 import numpy as np
 
@@ -63,11 +74,19 @@ from .sampling import (batched_step_keys, sample_one,  # noqa: F401
 class Scheduler:
     def __init__(self, engine, *, pool: Optional[KVCachePool] = None,
                  clock: Callable[[], float] = time.monotonic,
-                 max_burst: Optional[int] = None):
+                 max_burst: Optional[int] = None,
+                 tiers: Union[None, Sequence[str],
+                              Mapping[str, Optional[int]]] = None):
+        """``tiers``: KV tiers this scheduler serves — a sequence of tier
+        names (each pool sized by the engine's ServeConfig: explicit
+        ``n_slots`` or budget-derived per tier) or a {tier: n_slots}
+        mapping (None values fall back to the config sizing).  Default:
+        one pool at the engine policy's tier.  ``pool`` injects a single
+        pre-built pool instead (mutually exclusive with ``tiers``)."""
         self.engine = engine
-        if pool is None:
-            pool = engine.new_pool()
-        else:
+        if pool is not None and tiers is not None:
+            raise ValueError("give either pool= or tiers=, not both")
+        if pool is not None:
             # an injected pool must be chunk-aligned, or a final-chunk write
             # window past ``capacity`` gets clamp-shifted by
             # dynamic_update_slice onto committed positions (silent KV
@@ -79,15 +98,38 @@ class Scheduler:
                     f"pool capacity {pool.capacity} not aligned to prefill "
                     f"chunk {C} (need >= {need}); build it with "
                     f"engine.new_pool() or KVCachePool(..., align={C})")
-        self.pool = pool
+            self.pools: Dict[str, KVCachePool] = {pool.kv_dtype: pool}
+        elif tiers is not None:
+            items = list(tiers.items()) if isinstance(tiers, Mapping) \
+                else [(t, None) for t in tiers]
+            if not items:
+                raise ValueError("tiers= must name at least one KV tier")
+            self.pools = {}
+            for tier, n in items:
+                p = engine.new_pool(n_slots=n, kv_dtype=tier)
+                if p.kv_dtype in self.pools:
+                    raise ValueError(f"duplicate KV tier {p.kv_dtype!r}")
+                self.pools[p.kv_dtype] = p
+        else:
+            p = engine.new_pool()
+            self.pools = {p.kv_dtype: p}
+        # requests that don't ask for a tier (kv_policy=None) land here:
+        # the engine policy's tier when served, else the first tier listed
+        default = engine.scfg.kv_dtype
+        self.default_tier = default if default in self.pools \
+            else next(iter(self.pools))
         # burst cap: ServeConfig.max_burst unless overridden per scheduler
         self.max_burst = int(getattr(engine.scfg, "max_burst", 1)
                              if max_burst is None else max_burst)
         assert self.max_burst >= 1
         self.waiting: Deque[Request] = deque()
-        self.running: Dict[int, Request] = {}      # slot -> Request
+        self.running: Dict[Tuple[str, int], Request] = {}  # (tier, slot)
         self.finished: List[Request] = []
-        self.metrics = ServeMetrics(self.pool.n_slots)
+        self.metrics = ServeMetrics(
+            sum(p.n_slots for p in self.pools.values()))
+        if len(self.pools) > 1:
+            self.metrics.tiers = {t: p.n_slots
+                                  for t, p in self.pools.items()}
         # sharded serving is invisible to the scheduling logic (the pool
         # interface is identical), but the mesh shape belongs in reports
         self.metrics.topology = getattr(engine, "topology", None)
@@ -101,25 +143,40 @@ class Scheduler:
         self.n_host_syncs = 0
 
     @property
+    def pool(self) -> KVCachePool:
+        """The default tier's pool (single-tier callers' interface)."""
+        return self.pools[self.default_tier]
+
+    @property
     def n_decode_steps(self) -> int:
         """Decode TOKEN-steps executed (a burst adds its planned K)."""
         return self.metrics.decode_token_steps
 
     @property
     def n_decode_dispatches(self) -> int:
-        """Jitted decode/burst entries (one per decode round)."""
+        """Jitted decode/burst entries (one per tier cohort per round)."""
         return self.metrics.decode_dispatches
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> Request:
-        """FCFS enqueue.  Validates the request fits a slot end-to-end."""
+        """FCFS enqueue.  Resolves the request's KV tier and validates —
+        eagerly, with an actionable message — that the tier is served and
+        the request fits a slot of that tier end-to-end."""
+        tier = self.default_tier if req.kv_policy is None else req.kv_policy
+        if tier not in self.pools:
+            raise ValueError(
+                f"request kv_policy={req.kv_policy!r}: no pool at that "
+                f"tier; this scheduler serves {sorted(self.pools)} "
+                "(build it with Scheduler(engine, tiers=[...]))")
+        req.tier = tier
+        pool = self.pools[tier]
         need = req.prompt_len + req.sampling.max_new_tokens
-        if need > self.pool.max_len:
+        if need > pool.max_len:
             raise ValueError(
                 f"request needs {need} cache positions "
                 f"(prompt {req.prompt_len} + max_new "
                 f"{req.sampling.max_new_tokens}) > slot capacity "
-                f"{self.pool.max_len}")
+                f"{pool.max_len}")
         if req.id is None:
             req.id = self._next_id
         self._next_id = max(self._next_id, req.id) + 1
@@ -135,23 +192,25 @@ class Scheduler:
 
     @property
     def kv_bytes_per_token(self) -> int:
-        """Cache bytes one committed position costs (pool storage dtype
-        included) — the denominator of the slots-per-budget trade."""
+        """Cache bytes one committed position costs at the default tier
+        (pool storage dtype included) — the denominator of the
+        slots-per-budget trade."""
         return self.pool.bytes_per_token
 
     # ------------------------------------------------------------------
-    def _plan_burst(self, dec: List[Request]) -> int:
-        """Burst length K for this round (DESIGN.md §11).
+    def _plan_burst(self, dec: List[Request], pool: KVCachePool) -> int:
+        """Burst length K for one tier cohort's round (DESIGN.md §11).
 
-        K = min over the decode rows of the tokens that row can still emit
-        before a *predictable* scheduling event — its max-new-tokens budget
-        or its slot-capacity horizon — capped by ``max_burst`` and rounded
-        DOWN to a power of two (bounds compiled burst variants; correctness
-        never depends on the plan, only efficiency).  Clamped to 1 whenever
-        admission could happen next round (waiting queue non-empty) or a
-        prefill is mid-flight, so burst mode changes neither admission
-        latency nor prefill/decode interleaving.  EOS is unplannable and is
-        handled by the on-device stop masks instead."""
+        K = min over the cohort's rows of the tokens that row can still
+        emit before a *predictable* scheduling event — its max-new-tokens
+        budget or its slot-capacity horizon — capped by ``max_burst`` and
+        rounded DOWN to a power of two (bounds compiled burst variants;
+        correctness never depends on the plan, only efficiency).  Clamped
+        to 1 whenever admission could happen next round (waiting queue
+        non-empty, any tier) or a prefill is mid-flight, so burst mode
+        changes neither admission latency nor prefill/decode interleaving.
+        EOS is unplannable and is handled by the on-device stop masks
+        instead."""
         if self.max_burst <= 1 or self.waiting:
             return 1
         if any(r.state is RequestState.PREFILL
@@ -160,7 +219,7 @@ class Scheduler:
         k = self.max_burst
         for r in dec:
             budget = r.sampling.max_new_tokens - r.n_generated
-            capacity = self.pool.max_len - int(self.pool.lengths[r.slot]) - 1
+            capacity = pool.max_len - int(pool.lengths[r.slot]) - 1
             k = min(k, max(1, min(budget, capacity)))
         return 1 << (k.bit_length() - 1)   # largest power of two <= k
 
@@ -171,25 +230,42 @@ class Scheduler:
         emitted: List = []
         finished_now: List[Request] = []
 
-        # 1. admission: free slots go to the oldest waiting requests
-        while self.waiting and self.pool.n_free:
-            req = self.waiting.popleft()
-            req.slot = self.pool.alloc()
-            req.state = RequestState.PREFILL
-            req.prefill_pos = 0
-            # one-time prompt pre-pass: int32 + chunk padding hoisted out
-            # of the per-chunk loop (engine slices views from this buffer)
-            if req.prompt_padded is None:
-                req.prompt_padded, _ = self.engine.pad_prompt(req.prompt)
-            self.running[req.slot] = req
+        # 1. admission: arrival-order scan; a request is admitted when its
+        # tier's pool has a free slot (single tier: head-of-queue FCFS).
+        # The scan stops as soon as every pool is full — a backlogged
+        # queue costs O(1) per step, not a full deque rotation
+        free_total = sum(p.n_free for p in self.pools.values())
+        if free_total and self.waiting:
+            still: Deque[Request] = deque()
+            while self.waiting:
+                if free_total == 0:
+                    still.extend(self.waiting)
+                    self.waiting.clear()
+                    break
+                req = self.waiting.popleft()
+                pool = self.pools[req.tier]
+                if not pool.n_free:
+                    still.append(req)
+                    continue
+                req.slot = pool.alloc()
+                free_total -= 1
+                req.state = RequestState.PREFILL
+                req.prefill_pos = 0
+                # one-time prompt pre-pass: int32 + chunk padding hoisted
+                # out of the per-chunk loop (engine slices views from it)
+                if req.prompt_padded is None:
+                    req.prompt_padded, _ = self.engine.pad_prompt(req.prompt)
+                self.running[(req.tier, req.slot)] = req
+            self.waiting = still
 
         # 2. one prefill chunk for the oldest mid-prefill request
         pre = [r for r in self.running.values()
                if r.state is RequestState.PREFILL]
         if pre:
             req = min(pre, key=lambda r: r.id)
+            pool = self.pools[req.tier]
             chunk_logits = self.engine.prefill_chunk_into_slot(
-                self.pool, req.slot, req.prompt_padded, req.prefill_pos,
+                pool, req.slot, req.prompt_padded, req.prefill_pos,
                 prompt_len=req.prompt_len)
             C = self.engine.scfg.prefill_chunk
             req.prefill_pos = min(req.prefill_pos + C, req.prompt_len)
@@ -202,18 +278,21 @@ class Scheduler:
                                  req.step_key(), req.sampling.temperature)
                 self._emit(req, tok, emitted, finished_now)
 
-        # 3. one decode round (burst of K token-steps) over DECODE slots
+        # 3. one decode round (burst of K token-steps) per tier cohort
         dec = sorted((r for r in self.running.values()
                       if r.state is RequestState.DECODE), key=lambda r: r.id)
-        if dec:
-            k = self._plan_burst(dec)
+        for tier in sorted({r.tier for r in dec}):
+            cohort = [r for r in dec if r.tier == tier]
+            pool = self.pools[tier]
+            k = self._plan_burst(cohort, pool)
             if k <= 1:
-                self._decode_single(dec, emitted, finished_now)
+                self._decode_single(cohort, pool, emitted, finished_now)
             else:
-                self._decode_burst(dec, k, emitted, finished_now)
+                self._decode_burst(cohort, pool, k, emitted, finished_now)
 
         self.n_steps += 1
-        self.metrics.on_step(self._clock(), self.pool.n_used)
+        self.metrics.on_step(
+            self._clock(), sum(p.n_used for p in self.pools.values()))
         return {"emitted": emitted, "finished": finished_now}
 
     def _key_schedule(self, dec: List[Request], k: int,
@@ -233,32 +312,33 @@ class Scheduler:
             temps[r.slot] = r.sampling.temperature
             keys[:, r.slot] = row
 
-    def _decode_single(self, dec: List[Request], emitted: List,
-                       finished_now: List[Request]) -> None:
-        """K = 1: one fused decode+sample step (sampling still on device —
-        only [n_slots] token ids cross to the host)."""
-        n = self.pool.n_slots
+    def _decode_single(self, dec: List[Request], pool: KVCachePool,
+                       emitted: List, finished_now: List[Request]) -> None:
+        """K = 1: one fused decode+sample step for one tier cohort
+        (sampling still on device — only [n_slots] token ids cross to the
+        host)."""
+        n = pool.n_slots
         tokens = np.zeros((n,), np.int32)
         keys = np.zeros((1, n, 2), np.uint32)    # inactive rows: key 0
         temps = np.zeros((n,), np.float32)
         for r in dec:
             tokens[r.slot] = r.last_token
         self._key_schedule(dec, 1, keys, temps)
-        toks = self.engine.decode_slots(self.pool, tokens, keys[0], temps)
+        toks = self.engine.decode_slots(pool, tokens, keys[0], temps)
         self.n_host_syncs += 1
         self.metrics.on_decode_burst(1, len(dec))
         for r in dec:
             # the input token's KV was just written at lengths[slot]
-            self.pool.lengths[r.slot] += 1
+            pool.lengths[r.slot] += 1
             self._emit(r, int(toks[r.slot]), emitted, finished_now)
 
-    def _decode_burst(self, dec: List[Request], k: int, emitted: List,
-                      finished_now: List[Request]) -> None:
-        """K > 1: one device-resident burst.  Emission replays the device's
-        step-major order host-side, so `_emit` bookkeeping (retirement,
-        slot free, metrics) sees exactly the sequence K single steps would
-        have produced."""
-        n = self.pool.n_slots
+    def _decode_burst(self, dec: List[Request], pool: KVCachePool, k: int,
+                      emitted: List, finished_now: List[Request]) -> None:
+        """K > 1: one device-resident burst for one tier cohort.  Emission
+        replays the device's step-major order host-side, so `_emit`
+        bookkeeping (retirement, slot free, metrics) sees exactly the
+        sequence K single steps would have produced."""
+        n = pool.n_slots
         tokens = np.zeros((n,), np.int32)
         temps = np.zeros((n,), np.float32)
         eos = np.full((n,), -1, np.int32)
@@ -272,7 +352,7 @@ class Scheduler:
             rem[r.slot] = r.sampling.max_new_tokens - r.n_generated
         self._key_schedule(dec, k, keys, temps)
         toks, valid = self.engine.decode_burst(
-            self.pool, tokens, keys, temps, active, rem, eos)
+            pool, tokens, keys, temps, active, rem, eos)
         self.n_host_syncs += 1
         self.metrics.on_decode_burst(k, int(valid.sum()))
         # slots are captured before emission: _emit may retire a request
@@ -308,7 +388,8 @@ class Scheduler:
             self._retire(req, "eos", now, finished_now)
         elif req.n_generated >= sp.max_new_tokens:
             self._retire(req, "length", now, finished_now)
-        elif req.prompt_len + req.n_generated >= self.pool.max_len:
+        elif req.prompt_len + req.n_generated >= \
+                self.pools[req.tier].max_len:
             # defensive: submit() bounds prompt+max_new, so this only fires
             # for requests constructed around the validation.  The device
             # burst mirrors this exact condition in its stop mask.
@@ -319,8 +400,8 @@ class Scheduler:
         req.state = RequestState.FINISHED
         req.finish_reason = reason
         req.finish_time = now
-        del self.running[req.slot]
-        self.pool.free(req.slot)
+        del self.running[(req.tier, req.slot)]
+        self.pools[req.tier].free(req.slot)
         req.slot = None
         self.finished.append(req)
         finished_now.append(req)
