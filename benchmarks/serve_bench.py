@@ -49,6 +49,14 @@ the bf16 slots from the same budget, served from the same engine.
 ``PrecisionPolicy`` instead of the legacy flags (which keep working and
 print their policy equivalent).
 
+Every point carries a ``model_measured`` block (DESIGN.md §13): per-
+step-shape and per-KV-tier model/measured ratios joining each dispatch's
+host wall against the analytical decode model (perfmodel/analytical.py)
+priced at the pool tier's KV bytes/token.  ``--trace-dir`` additionally
+writes per-point Chrome traces (Perfetto-loadable), Prometheus-style
+expositions and registry snapshots; ``--hlo-cost`` joins trip-count-aware
+FLOP/byte counts of the compiled step.
+
 Smoke (CPU, ~1 min incl. compile):
     python benchmarks/serve_bench.py
 Burst amortization sweep:
@@ -141,11 +149,25 @@ def warmup(engine, prompts, max_new, tiers=None):
             sched.run(max_steps=200)
 
 
+def point_label(cfg, kv_dtype, tiers, max_burst):
+    label = "+".join(tiers) if tiers else kv_dtype
+    return f"serve_{cfg.name}_{label.replace('+', '-')}_burst{max_burst}"
+
+
 def run_point(args, cfg, engine, kv_dtype, tiers=None):
     """One sweep point: the seeded workload at one pool dtype — or, with
     ``tiers``, the MIXED-TIER workload: one engine, one pool per KV tier,
     requests assigned tiers round-robin (``Request.kv_policy``) so
-    bf16/int8/fp8 traffic interleaves, mid-flight admission included."""
+    bf16/int8/fp8 traffic interleaves, mid-flight admission included.
+
+    Every point runs with the model-vs-measured profiler attached
+    (DESIGN.md §13) — the sweep JSON carries per-tier and per-step-shape
+    model/measured ratios, which is what makes a KV-tier sweep comparable
+    against the analytical model rather than only against itself.  With
+    ``--trace-dir`` the point additionally writes a Chrome trace, a
+    Prometheus-style exposition and periodic registry snapshots."""
+    from repro.obs import (MetricsRegistry, Observability, SnapshotWriter,
+                           StepProfiler, Tracer)
     from repro.serve import Request, SamplingParams, Scheduler
     arrivals, prompts = make_workload(args, cfg.vocab)
     if not args.no_warmup:
@@ -153,7 +175,16 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None):
         warmup(engine, prompts, args.max_new, tiers=tiers)
         print(f"== warmup (compile) {time.monotonic() - t0:.1f}s")
 
-    sched = Scheduler(engine, tiers=tiers)
+    obs = Observability(profiler=StepProfiler(cfg))
+    stem = None
+    if args.trace_dir:
+        os.makedirs(args.trace_dir, exist_ok=True)
+        stem = os.path.join(args.trace_dir,
+                            point_label(cfg, kv_dtype, tiers, args.max_burst))
+        obs.tracer = Tracer()
+        obs.registry = MetricsRegistry()
+        obs.snapshots = SnapshotWriter(obs.registry, stem + ".metrics.jsonl")
+    sched = Scheduler(engine, tiers=tiers, obs=obs)
     for tier, pool in sorted(sched.pools.items()):
         print(f"== pool[{tier}]: {pool.n_slots} slots x {pool.max_len} "
               f"positions; {pool.bytes_per_token} B/token, "
@@ -228,6 +259,22 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None):
             sched.n_host_syncs / rep["total_new_tokens"], 4)
     if args.cache_budget_mb:
         rep["cache_budget_mb"] = args.cache_budget_mb
+    # model-vs-measured join (always on): per step shape and per KV tier
+    rep["model_measured"] = obs.profiler.report()
+    if args.hlo_cost:
+        # static compiled-step costs per pool (trip-count-aware HLO walk);
+        # offline lowering — never touches the timed run above
+        from repro.obs import compiled_step_cost
+        rep["compiled_step_cost"] = {
+            t: compiled_step_cost(engine, p)
+            for t, p in sorted(sched.pools.items())}
+    if stem is not None:
+        obs.tracer.write(stem + ".trace.json")
+        with open(stem + ".metrics.txt", "w") as f:
+            f.write(obs.registry.expose())
+        print(f"== trace: {stem}.trace.json ({len(obs.tracer)} events); "
+              f"metrics: {stem}.metrics.txt "
+              f"(+{obs.snapshots.n_written} snapshots)")
     return rep
 
 
@@ -272,6 +319,15 @@ def main():
                          "(per tier in --tiers mode)")
     ap.add_argument("--out-dir", default=None,
                     help="write one JSON per sweep point here")
+    ap.add_argument("--trace-dir", default=None,
+                    help="write per-point observability artifacts here: "
+                         "Chrome trace (.trace.json, open in Perfetto), "
+                         "Prometheus exposition (.metrics.txt) and registry "
+                         "snapshots (.metrics.jsonl) — DESIGN.md §13")
+    ap.add_argument("--hlo-cost", action="store_true",
+                    help="also report trip-count-aware FLOP/byte counts of "
+                         "the compiled decode step per pool "
+                         "(launch/hlo_analysis.py; offline lowering)")
     ap.add_argument("--dp", type=int, default=1,
                     help="data-parallel mesh axis (pool slots shard here)")
     ap.add_argument("--tp", type=int, default=1,
@@ -324,10 +380,9 @@ def main():
             os.makedirs(args.out_dir, exist_ok=True)
             path = os.path.join(
                 args.out_dir,
-                f"serve_{cfg.name}_{label.replace('+', '-')}"
-                f"_burst{args.max_burst}.json")
+                point_label(cfg, kv_dtype, tiers, args.max_burst) + ".json")
             with open(path, "w") as f:
-                json.dump(rep, f, indent=2)
+                json.dump(rep, f, indent=2, allow_nan=False)
             print(f"== wrote {path}")
         reports.append(rep)
 
@@ -336,10 +391,12 @@ def main():
         print(f"{'kv_dtype':>8} {'slots':>6} {'B/tok':>6} {'tok/s':>8} "
               f"{'disp/tok':>9} {'ttft_p50':>9} {'occupancy':>10}")
         for r in reports:
+            # missing/null fields print as '-' (reports are NaN-free JSON)
             print(f"{r['kv_dtype']:>8} {r['n_slots']:>6} "
-                  f"{r['kv_bytes_per_token']:>6} {r['tokens_per_s']:>8} "
-                  f"{r.get('decode_dispatches_per_token', float('nan')):>9} "
-                  f"{r.get('ttft_p50_s', float('nan')):>9} "
+                  f"{r['kv_bytes_per_token']:>6} "
+                  f"{str(r.get('tokens_per_s') or '-'):>8} "
+                  f"{str(r.get('decode_dispatches_per_token', '-')):>9} "
+                  f"{str(r.get('ttft_p50_s', '-')):>9} "
                   f"{r['slot_occupancy_mean']:>10}")
 
     if args.baseline_json:

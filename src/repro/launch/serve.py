@@ -49,6 +49,14 @@ def main():
     ap.add_argument("--force-host-devices", type=int, default=0,
                     help="CPU validation: fake this many host devices "
                          "(sets XLA_FLAGS before jax initializes)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the timed run "
+                         "(per-request spans + per-dispatch events; open in "
+                         "Perfetto / chrome://tracing — DESIGN.md §13)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics registry: Prometheus-style text "
+                         "exposition at PATH plus periodic JSONL snapshots "
+                         "at PATH.jsonl")
     args = ap.parse_args()
 
     force_host_devices(args.force_host_devices)
@@ -100,19 +108,39 @@ def main():
         batch["frames"] = jnp.full((args.batch, cfg.n_frames, cfg.d_model),
                                    0.02, jnp.bfloat16)
 
+    # observability bundle for the timed run (DESIGN.md §13): tracing,
+    # registry + snapshots, and the model-vs-measured profiler.  Only
+    # built when a sink was requested — otherwise the scheduler runs its
+    # zero-overhead disabled path.
+    obs = None
+    if args.trace or args.metrics_out:
+        from repro.obs import (MetricsRegistry, Observability,
+                               SnapshotWriter, StepProfiler, Tracer)
+        registry = MetricsRegistry() if args.metrics_out else None
+        obs = Observability(
+            tracer=Tracer() if args.trace else None,
+            registry=registry,
+            profiler=StepProfiler(cfg),
+            snapshots=SnapshotWriter(registry, args.metrics_out + ".jsonl")
+            if registry is not None else None)
+
     # warmup: one full-shape generation compiles every jit off the clock.
     # Scheduler families compile chunk/decode/sample once regardless of
     # batch, but the legacy static-batch loop (ssm/hybrid/audio/vlm) sizes
     # its cache from (batch, prompt+max_new) — warming up with the real
     # shapes makes the timed run steady-state for every family.
-    t0 = time.time()
+    # perf_counter, not time.time(): wall deltas must be monotonic and
+    # high-resolution (time.time() can step under NTP and ticks coarsely
+    # on some hosts, which corrupts sub-second compile/steady windows)
+    t0 = time.perf_counter()
     engine.generate(batch, max_new_tokens=args.max_new, seed=args.seed)
-    compile_s = time.time() - t0
+    compile_s = time.perf_counter() - t0
     print(f"warmup (compile + first run) {compile_s:.2f}s")
 
-    t0 = time.time()
-    out = engine.generate(batch, max_new_tokens=args.max_new, seed=args.seed)
-    dt = time.time() - t0
+    t0 = time.perf_counter()
+    out = engine.generate(batch, max_new_tokens=args.max_new, seed=args.seed,
+                          obs=obs)
+    dt = time.perf_counter() - t0
     new_tokens = int(out["lengths"].sum())
     print(f"generated {out['generated'].shape} in {dt:.2f}s "
           f"({new_tokens / dt:.1f} tok/s steady-state)")
@@ -133,7 +161,19 @@ def main():
             "host_syncs": out["host_syncs"],
             "burst_hist": {str(k): v for k, v
                            in sorted(out["burst_hist"].items())}})
-    print(json.dumps(report))
+    if obs is not None:
+        if obs.tracer is not None and len(obs.tracer):
+            obs.tracer.write(args.trace)
+            print(f"trace: {args.trace} ({len(obs.tracer)} events)")
+        if obs.profiler is not None and obs.profiler.n_records:
+            report["model_measured"] = obs.profiler.report()
+        if obs.registry is not None:
+            with open(args.metrics_out, "w") as f:
+                f.write(obs.registry.expose())
+            snaps = obs.snapshots.n_written if obs.snapshots else 0
+            print(f"metrics: {args.metrics_out} "
+                  f"(+{snaps} snapshots in {args.metrics_out}.jsonl)")
+    print(json.dumps(report, allow_nan=False))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,206 @@
+"""Model-vs-measured profiler: per-dispatch wall timings joined against
+the analytical performance model (perfmodel/analytical.py), with optional
+trip-count-aware FLOP/byte counts of the compiled step
+(launch/hlo_analysis.py).
+
+This is the serving-level version of the paper's compute-density
+accounting (Table IV/V -> Fig. 14): the analytical model predicts what a
+decode step *should* cost on the modeled hardware given its shape
+(cohort rows, context, KV bytes/token at the pool's tier), the profiler
+measures what each dispatch actually cost on the host wall clock, and
+``report()`` joins the two into a model/measured ratio per step shape
+and per KV tier.  A tier whose ratio drifts from its siblings' is a tier
+whose datatype switch is NOT free — exactly the regression the paper's
+II=1 claim rules out on the FPGA, surfaced here for the serving loop
+(DESIGN.md §13).
+
+Recording is deliberately cheap: ``record_decode``/``record_prefill``
+append a tuple and return — all model evaluation (which walks the
+abstract parameter tree) is deferred to ``report()`` and memoized per
+distinct step shape.  The profiler's wall clock defaults to
+``time.perf_counter`` (monotonic, real time — model/measured only means
+something against real walls) and is injectable for tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class _DecodeRec:
+    tier: str
+    k: int                 # planned burst length (token-steps)
+    rows: int              # active cohort rows in the dispatch
+    context: int           # mean committed context of the cohort
+    kv_bytes_per_token: int
+    wall_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class _PrefillRec:
+    tier: str
+    n_tokens: int          # chunk tokens written
+    wall_s: float
+
+
+class StepProfiler:
+    """Join per-dispatch wall timings against analytical predictions.
+
+    ``design`` picks which arithmetic-unit deployment the model prices
+    ('xtramac' or 'vendor'); ``scheme`` defaults to the config's
+    projection scheme, falling back to 'w8a8' when the config's scheme
+    has no deployment row (e.g. pure-bf16 configs) — the fallback is
+    recorded in the report so ratios are never silently re-based.
+    """
+
+    def __init__(self, cfg, *, design: str = "xtramac",
+                 scheme: Optional[str] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        from repro.perfmodel.analytical import _DEPLOY
+        self.cfg = cfg
+        self.design = design
+        want = scheme or cfg.scheme_proj or "w8a8"
+        self.scheme = want if want in _DEPLOY else "w8a8"
+        self.scheme_fallback = self.scheme != want
+        self.clock = clock
+        self._decode: List[_DecodeRec] = []
+        self._prefill: List[_PrefillRec] = []
+        self._model_memo: Dict = {}
+
+    # -- recording (hot path: append only) ---------------------------------
+    def record_decode(self, *, tier: str, k: int, rows: int, context: int,
+                      kv_bytes_per_token: int, wall_s: float) -> None:
+        self._decode.append(_DecodeRec(tier, int(k), int(rows),
+                                       int(context), int(kv_bytes_per_token),
+                                       float(wall_s)))
+
+    def record_prefill(self, *, tier: str, n_tokens: int,
+                       wall_s: float) -> None:
+        self._prefill.append(_PrefillRec(tier, int(n_tokens), float(wall_s)))
+
+    @property
+    def n_records(self) -> int:
+        return len(self._decode) + len(self._prefill)
+
+    # -- model join --------------------------------------------------------
+    def _model_step_s(self, rows: int, context: int,
+                      kv_bytes_per_token: int) -> float:
+        """Predicted seconds for ONE decode token-step at this shape
+        (memoized — contexts repeat across bursts and tiers)."""
+        key = (rows, context, kv_bytes_per_token)
+        t = self._model_memo.get(key)
+        if t is None:
+            from repro.perfmodel.analytical import decode_latency
+            t = decode_latency(
+                self.cfg, self.scheme, batch=max(rows, 1),
+                context=max(context, 1), design=self.design,
+                kv_bytes_per_token=kv_bytes_per_token)["t_total_s"]
+            self._model_memo[key] = t
+        return t
+
+    def report(self) -> Dict:
+        """Group dispatches by (kind, tier, K, rows) and join model vs
+        measured.  ``model_over_measured`` < 1 means the real dispatch
+        was slower than the modeled hardware (expected on CPU smoke
+        hosts by orders of magnitude — the *relative* ratios across
+        tiers and step shapes are the signal); prefill dispatches are
+        measured-only (the analytical model covers decode)."""
+        groups: Dict = {}
+        for r in self._decode:
+            g = groups.setdefault(("decode", r.tier, r.k, r.rows), {
+                "kind": "decode", "tier": r.tier, "k": r.k, "rows": r.rows,
+                "n": 0, "measured_s": 0.0, "model_s": 0.0, "_ctx": 0})
+            g["n"] += 1
+            g["measured_s"] += r.wall_s
+            g["model_s"] += r.k * self._model_step_s(
+                r.rows, r.context, r.kv_bytes_per_token)
+            g["_ctx"] += r.context
+        for r in self._prefill:
+            g = groups.setdefault(("prefill", r.tier, r.n_tokens), {
+                "kind": "prefill_chunk", "tier": r.tier,
+                "n_tokens": r.n_tokens, "n": 0, "measured_s": 0.0,
+                "model_s": None})
+            g["n"] += 1
+            g["measured_s"] += r.wall_s
+
+        rows = []
+        for key in sorted(groups, key=str):
+            g = dict(groups[key])
+            ctx = g.pop("_ctx", None)
+            if ctx is not None:
+                g["context_mean"] = round(ctx / g["n"], 1)
+            g["measured_s"] = round(g["measured_s"], 6)
+            if g["model_s"] is not None:
+                g["model_s"] = round(g["model_s"], 9)
+                g["model_over_measured"] = (
+                    round(g["model_s"] / g["measured_s"], 6)
+                    if g["measured_s"] > 0 else None)
+            rows.append(g)
+
+        per_tier: Dict[str, Dict] = {}
+        for r in self._decode:
+            t = per_tier.setdefault(r.tier, {"dispatches": 0,
+                                             "token_steps": 0,
+                                             "measured_s": 0.0,
+                                             "model_s": 0.0})
+            t["dispatches"] += 1
+            t["token_steps"] += r.k
+            t["measured_s"] += r.wall_s
+            t["model_s"] += r.k * self._model_step_s(
+                r.rows, r.context, r.kv_bytes_per_token)
+        for t in per_tier.values():
+            t["measured_s"] = round(t["measured_s"], 6)
+            t["model_s"] = round(t["model_s"], 9)
+            t["model_over_measured"] = (
+                round(t["model_s"] / t["measured_s"], 6)
+                if t["measured_s"] > 0 else None)
+
+        return {"design": self.design, "scheme": self.scheme,
+                "scheme_fallback": self.scheme_fallback,
+                "groups": rows,
+                "per_tier": {k: per_tier[k] for k in sorted(per_tier)}}
+
+
+def compiled_step_cost(engine, pool, k: int = 1) -> Dict:
+    """Trip-count-aware FLOP/byte counts of the COMPILED decode step for
+    ``pool``'s geometry (launch/hlo_analysis.py over the post-optimization
+    HLO text): the static half of the compute-density accounting — what
+    the program does per dispatch, independent of how long the host took.
+
+    ``k > 1`` analyzes the K-step burst scan (the scan body is multiplied
+    by its known trip count).  This lowers and compiles the step outside
+    the engine's jit cache, so it is an offline/diagnostic call, not a
+    hot-path one.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.hlo_analysis import analyze
+
+    n = pool.n_slots
+    f32 = jnp.float32
+
+    def spec(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    cache = jax.tree_util.tree_map(
+        lambda a: spec(a.shape, a.dtype), pool.cache)
+    row_i32 = spec((n,), jnp.int32)
+    if k <= 1:
+        lowered = jax.jit(engine._decode_slots_fn).lower(
+            engine.params, spec((n, 1), jnp.int32), cache, row_i32,
+            spec((n, 2), jnp.uint32), spec((n,), f32))
+    else:
+        lowered = jax.jit(engine._decode_burst_fn).lower(
+            engine.params, cache, row_i32, row_i32, spec((n,), jnp.bool_),
+            row_i32, spec((k, n, 2), jnp.uint32), spec((n,), f32), row_i32,
+            jnp.int32(pool.max_len))
+    cost = analyze(lowered.compile().as_text())
+    steps = k * n
+    return {"k": k, "n_slots": n, "kv_dtype": pool.kv_dtype,
+            "flops": cost.flops, "hbm_bytes": cost.hbm_bytes,
+            "collective_bytes": cost.collective_bytes,
+            "flops_per_token_step": round(cost.flops / steps, 1),
+            "hbm_bytes_per_token_step": round(cost.hbm_bytes / steps, 1)}

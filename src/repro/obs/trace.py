@@ -1,0 +1,120 @@
+"""Structured tracing for the serving path: Chrome trace-event emission.
+
+The serving analogue of the paper's per-cycle pipeline visibility
+(sustained II=1 is a *rate* claim — you can only defend it by looking at
+the timeline): the scheduler emits one span per request lifecycle phase
+(WAITING / PREFILL / DECODE) and one complete event per engine dispatch
+(prefill chunk, decode burst with its planned K, tier, slot set and
+host-sync wall time), all timestamped by the scheduler's injectable
+clock.  Under a virtual clock two identical runs produce byte-identical
+trace files — the determinism contract tests pin (DESIGN.md §13).
+
+Output is the Chrome trace-event "JSON array format": one event object
+per line inside a top-level array, loadable directly in Perfetto
+(https://ui.perfetto.dev) or chrome://tracing.  Events are serialized
+with sorted keys and fixed separators so the bytes are a pure function
+of the event stream.
+
+Layout convention used by the scheduler (docs/observability.md):
+
+  pid 1 "requests"   — one tid per request id; spans WAITING/PREFILL/
+                       DECODE plus first_token / finish instants.
+  pid 2 "scheduler"  — tid 0 = prefill lane, tid 1+i = decode lane of
+                       the i-th KV tier (sorted); dispatch events plus
+                       queue-depth / slots-used counter tracks.
+
+Timestamps are microseconds (Chrome trace convention); the tracer takes
+clock values in seconds — whatever clock the scheduler was built with.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+# process ids of the two trace rows the scheduler emits (module-level so
+# tests and external consumers address the same lanes)
+PID_REQUESTS = 1
+PID_SCHEDULER = 2
+
+
+def _us(t_s: float) -> float:
+    """Seconds -> microseconds (Chrome trace ts unit)."""
+    return round(t_s * 1e6, 3)
+
+
+class Tracer:
+    """Append-only Chrome trace-event buffer.
+
+    All emit methods take clock values in SECONDS (the scheduler clock's
+    unit) and convert to the trace's microsecond timebase.  Events are
+    kept in emission order; serialization is deterministic (sorted keys,
+    compact separators), so identical event streams yield identical
+    bytes.
+    """
+
+    def __init__(self):
+        self.events: List[Dict] = []
+        self._named: set = set()
+
+    # -- metadata ----------------------------------------------------------
+    def process_name(self, pid: int, name: str) -> None:
+        key = ("process", pid)
+        if key in self._named:
+            return
+        self._named.add(key)
+        self.events.append({"ph": "M", "name": "process_name", "pid": pid,
+                            "tid": 0, "args": {"name": name}})
+
+    def thread_name(self, pid: int, tid: int, name: str) -> None:
+        key = ("thread", pid, tid)
+        if key in self._named:
+            return
+        self._named.add(key)
+        self.events.append({"ph": "M", "name": "thread_name", "pid": pid,
+                            "tid": tid, "args": {"name": name}})
+
+    # -- events ------------------------------------------------------------
+    def complete(self, name: str, t0_s: float, t1_s: float, *, pid: int,
+                 tid: int, cat: str = "serve",
+                 args: Optional[Dict] = None) -> None:
+        """One 'X' (complete) event spanning [t0_s, t1_s]."""
+        evt = {"ph": "X", "name": name, "cat": cat, "pid": pid, "tid": tid,
+               "ts": _us(t0_s), "dur": _us(max(t1_s - t0_s, 0.0))}
+        if args:
+            evt["args"] = args
+        self.events.append(evt)
+
+    def instant(self, name: str, t_s: float, *, pid: int, tid: int,
+                cat: str = "serve", args: Optional[Dict] = None) -> None:
+        evt = {"ph": "i", "s": "t", "name": name, "cat": cat, "pid": pid,
+               "tid": tid, "ts": _us(t_s)}
+        if args:
+            evt["args"] = args
+        self.events.append(evt)
+
+    def counter(self, name: str, t_s: float, values: Dict[str, float], *,
+                pid: int = PID_SCHEDULER, tid: int = 0,
+                cat: str = "serve") -> None:
+        """One 'C' (counter) sample — renders as a stacked track."""
+        self.events.append({"ph": "C", "name": name, "cat": cat, "pid": pid,
+                            "tid": tid, "ts": _us(t_s),
+                            "args": dict(values)})
+
+    # -- serialization -----------------------------------------------------
+    def to_json(self) -> str:
+        """Chrome trace-event array format, one event per line.  The
+        result is both valid RFC JSON (closed array) and line-structured
+        (every event is one self-contained JSON object on its own line),
+        which is what makes it greppable AND Perfetto-loadable."""
+        lines = [json.dumps(e, sort_keys=True, separators=(",", ":"),
+                            allow_nan=False)
+                 for e in self.events]
+        return "[\n" + ",\n".join(lines) + "\n]\n"
+
+    def write(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return path
+
+    def __len__(self) -> int:
+        return len(self.events)

@@ -21,6 +21,7 @@ MAC counting per decode token (context L):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Tuple
 
 from repro.core.resource_model import Resources, TABLE_IV, TABLE_V
@@ -60,8 +61,12 @@ _SCHEME_WEIGHT_BITS = {"awq_int4": 4, "mxfp4": 4, "fp8": 8, "w8a8": 8,
                        "bf16": 16}
 
 
+@functools.lru_cache(maxsize=64)
 def _param_split(cfg: ModelConfig) -> Dict[str, float]:
-    """Active parameter counts by role: {'proj': N, 'head': N} per layer sum."""
+    """Active parameter counts by role: {'proj': N, 'head': N} per layer sum.
+    Memoized (ModelConfig is frozen/hashable): the serving profiler calls
+    ``decode_latency`` once per distinct step shape and the abstract
+    param-tree walk is the dominant cost of each call."""
     from repro.launch.roofline import model_params
     p = model_params(cfg)
     # embedding + lm_head stream once per token too, in bf16
@@ -97,13 +102,24 @@ def mac_unit_budget(per_op: Resources, fpga: FPGAProfile) -> int:
 
 
 def decode_latency(cfg: ModelConfig, scheme: str, *, batch: int, context: int,
-                   design: str, fpga: FPGAProfile = V80) -> Dict[str, float]:
-    """One decode step latency under the two-phase streaming model."""
+                   design: str, fpga: FPGAProfile = V80,
+                   kv_bytes_per_token: float = None) -> Dict[str, float]:
+    """One decode step latency under the two-phase streaming model.
+
+    ``kv_bytes_per_token`` overrides the default bf16 KV storage cost
+    (2 slabs x 2 B x Hk x dh x L per cached position) — quantized KV
+    tiers (DESIGN.md §9) stream fewer bytes per context position, which
+    is how the serving profiler (obs/profiler.py) prices a pool tier
+    into the prediction.
+    """
     split = _param_split(cfg)
     w_bits = _SCHEME_WEIGHT_BITS[scheme]
     weight_bytes = split["proj"] * w_bits / 8.0 + split["emb"] * 2.0
-    # KV read for attention (bf16), grows with context
-    kv_bytes = 2.0 * 2 * context * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers
+    # KV read for attention, grows with context (default: bf16 storage)
+    if kv_bytes_per_token is None:
+        kv_bytes_per_token = \
+            2.0 * 2 * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers
+    kv_bytes = context * float(kv_bytes_per_token)
     t_mem = (weight_bytes + batch * kv_bytes) / (fpga.hbm_gbps * 1e9)
 
     vendor_slot, (vq, vb), xtra_inst, (xq, xb) = _DEPLOY[scheme]

@@ -564,15 +564,19 @@ class ServingEngine:
     # One-shot generation (backwards-compatible wrapper)
     # ------------------------------------------------------------------
     def generate(self, batch: Dict, *, max_new_tokens: int,
-                 seed: int = 0) -> Dict:
+                 seed: int = 0, obs=None) -> Dict:
         """batch: {'tokens': [B, S]} (+ stubs).  Returns generated ids
         [B, T] (post-EOS positions masked to 0), per-row lengths and finish
-        reasons."""
+        reasons.  ``obs``: optional ``repro.obs.Observability`` bundle
+        threaded into the internal Scheduler (DESIGN.md §13); the legacy
+        static-batch families have no scheduler and ignore it."""
         if self.cfg.family in SCHEDULABLE_FAMILIES:
-            return self._generate_scheduled(batch, max_new_tokens, seed)
+            return self._generate_scheduled(batch, max_new_tokens, seed,
+                                            obs=obs)
         return self._generate_legacy(batch, max_new_tokens, seed)
 
-    def _generate_scheduled(self, batch, max_new_tokens: int, seed: int):
+    def _generate_scheduled(self, batch, max_new_tokens: int, seed: int,
+                            obs=None):
         from .request import Request, SamplingParams
         from .scheduler import Scheduler
 
@@ -580,7 +584,7 @@ class ServingEngine:
         b, s = tokens.shape
         assert s + max_new_tokens <= self.scfg.max_len, \
             "grow ServeConfig.max_len"
-        sched = Scheduler(self)
+        sched = Scheduler(self, obs=obs)
         reqs = [sched.submit(Request(
             prompt=tokens[i],
             sampling=SamplingParams(temperature=self.scfg.temperature,

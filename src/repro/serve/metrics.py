@@ -8,7 +8,10 @@
   * slot occupancy — time-weighted fraction of KV pool slots in use: the
              serving-level analogue of the paper's sustained-II=1 claim
              (a MAC array only hits its rated throughput if the scheduler
-             keeps it fed; so for the pool).
+             keeps it fed; so for the pool).  Multi-tier schedulers also
+             get a per-tier occupancy (each tier's pool weighted by its
+             own slot count) — a tier can starve while the total looks
+             healthy.
   * burst accounting (DESIGN.md §11) — decode dispatches, token-steps and
              a burst-length histogram: ``decode_dispatches_per_token`` is
              the direct measure of how amortized the decode hot path ran
@@ -22,11 +25,26 @@ at burst end (the whole point is that nothing crosses the host mid-burst),
 so their timestamps cluster there — intra-burst ITL gaps are near zero and
 the burst's wall time lands on the gap *between* bursts.  Mean ITL and
 tok/s are unaffected (same tokens, same wall clock); percentiles are
-burst-granular.  ``report()`` flags this via ``itl_granularity``.
+burst-granular.  ``report()`` flags this via ``itl_granularity`` and
+additionally reports ``itl_burst_spread_*``: an estimate that spreads
+each burst's wall time uniformly across the tokens it emitted (grouped by
+the per-token dispatch ids the scheduler records), which is the
+defensible per-token percentile when bursts ran.
+
+**Registry consumption** (DESIGN.md §13): with a
+``repro.obs.MetricsRegistry`` attached, every event hook additionally
+publishes into shared counter/histogram families — ``ServeMetrics`` is a
+*consumer* of the registry, not a parallel bookkeeping system; the
+scheduler publishes its own gauges (queue depth, per-tier slots) into
+the same registry.  ``registry=None`` (default) changes nothing.
+
+``report()`` is RFC-JSON clean: fields whose denominator is empty are
+``None`` (-> ``null``), never ``float("nan")`` — ``json.dumps(report,
+allow_nan=False)`` must always succeed (round-trip pinned in tests).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Mapping, Optional, Union
 
 import numpy as np
 
@@ -35,8 +53,40 @@ def _pct(values: List[float], q: float) -> float:
     return float(np.percentile(np.asarray(values, np.float64), q))
 
 
+def burst_spread_itl(token_times: List[float],
+                     token_dispatches: List[int]) -> List[float]:
+    """Per-token ITL estimate with each dispatch's wall time spread
+    uniformly across the tokens it emitted.
+
+    Tokens sharing a dispatch id surfaced from one burst at (nearly) one
+    timestamp; the raw gap sequence therefore puts the whole burst wall
+    on its first token and ~0 on the rest.  Here a group of m tokens
+    emitted by one dispatch, following a previous token at t_prev,
+    contributes m samples of (t_group_end - t_prev) / m.  Sample count
+    equals the raw gap count (len - 1); with K=1 everywhere the estimate
+    IS the raw diff sequence.
+    """
+    n = len(token_times)
+    if n < 2 or len(token_dispatches) != n:
+        return list(np.diff(np.asarray(token_times))) if n > 1 else []
+    out: List[float] = []
+    i = 0
+    while i < n:
+        j = i
+        while j + 1 < n and token_dispatches[j + 1] == token_dispatches[i]:
+            j += 1
+        if i == 0:
+            if j > 0:                       # gaps inside the first group
+                out.extend([(token_times[j] - token_times[0]) / j] * j)
+        else:
+            m = j - i + 1
+            out.extend([(token_times[j] - token_times[i - 1]) / m] * m)
+        i = j + 1
+    return out
+
+
 class ServeMetrics:
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, registry=None):
         self.n_slots = n_slots
         # {'n_devices', 'dp', 'tp'} when serving under a mesh (set by the
         # scheduler from engine.topology); None for single-device serving
@@ -47,35 +97,79 @@ class ServeMetrics:
         self.tiers: Optional[Dict[str, int]] = None
         self.ttft: List[float] = []
         self.itl: List[float] = []
+        self.itl_spread: List[float] = []     # burst-spread ITL estimate
         self.e2e: List[float] = []            # per-request total latency
         self.n_requests = 0
         self.total_new_tokens = 0
         self.first_arrival: Optional[float] = None
         self.last_finish: Optional[float] = None
-        # time-weighted occupancy integral
+        # time-weighted occupancy integrals (total, and per tier when the
+        # scheduler passes per-tier samples)
         self._occ_integral = 0.0
         self._occ_time = 0.0
+        self._tier_occ: Dict[str, float] = {}
         self._last_sample: Optional[float] = None
         # decode-burst accounting (DESIGN.md §11)
         self.decode_dispatches = 0      # jitted decode/burst entries
         self.decode_token_steps = 0     # token-steps those entries covered
         self.decode_tokens_emitted = 0  # tokens that actually surfaced
         self.burst_hist: Dict[int, int] = {}   # planned K -> count
+        # optional shared registry (repro.obs) this consumer publishes to
+        self._reg = registry
+        if registry is not None:
+            self._r_arrived = registry.counter(
+                "serve_requests_arrived_total", "requests submitted")
+            self._r_finished = registry.counter(
+                "serve_requests_finished_total",
+                "requests retired, by finish reason and KV tier")
+            self._r_tokens = registry.counter(
+                "serve_new_tokens_total", "generated tokens, by KV tier")
+            self._r_dispatch = registry.counter(
+                "serve_decode_dispatches_total",
+                "jitted decode/burst entries, by KV tier")
+            self._r_steps = registry.counter(
+                "serve_decode_token_steps_total",
+                "planned decode token-steps, by KV tier")
+            self._r_burst = registry.histogram(
+                "serve_burst_k", "planned burst length per decode dispatch",
+                buckets=(1, 2, 4, 8, 16, 32, 64))
+            self._r_ttft = registry.histogram(
+                "serve_ttft_seconds", "time to first token")
+            self._r_e2e = registry.histogram(
+                "serve_e2e_seconds", "request arrival -> retirement")
 
     # -- event hooks (called by the scheduler) -----------------------------
     def on_arrival(self, now: float) -> None:
         if self.first_arrival is None:
             self.first_arrival = now
+        if self._reg is not None:
+            self._r_arrived.inc()
 
-    def on_step(self, now: float, used_slots: int) -> None:
-        """Sample occupancy; weight = wall time since the previous sample."""
+    def on_step(self, now: float,
+                used_slots: Union[int, Mapping[str, int]]) -> None:
+        """Sample occupancy; weight = wall time since the previous sample.
+        ``used_slots`` is either the total used count (legacy) or a
+        {tier: used} mapping — the mapping form also feeds the per-tier
+        occupancy integrals when ``self.tiers`` is set."""
+        per_tier = None
+        if isinstance(used_slots, Mapping):
+            per_tier = used_slots
+            used_slots = sum(used_slots.values())
         if self._last_sample is not None:
             dt = max(now - self._last_sample, 0.0)
             self._occ_integral += dt * (used_slots / self.n_slots)
             self._occ_time += dt
+            if per_tier is not None and self.tiers:
+                for tier, used in per_tier.items():
+                    cap = self.tiers.get(tier)
+                    if cap:
+                        self._tier_occ[tier] = (
+                            self._tier_occ.get(tier, 0.0)
+                            + dt * (used / cap))
         self._last_sample = now
 
-    def on_decode_burst(self, k: int, tokens_emitted: int) -> None:
+    def on_decode_burst(self, k: int, tokens_emitted: int,
+                        tier: Optional[str] = None) -> None:
         """One decode dispatch covering ``k`` planned token-steps (k = 1
         for the fused single step).  ``tokens_emitted`` counts the tokens
         that actually surfaced across all rows (rows frozen mid-burst emit
@@ -85,17 +179,36 @@ class ServeMetrics:
         self.decode_token_steps += k
         self.decode_tokens_emitted += tokens_emitted
         self.burst_hist[k] = self.burst_hist.get(k, 0) + 1
+        if self._reg is not None:
+            t = tier or ""
+            self._r_dispatch.inc(tier=t)
+            self._r_steps.inc(k, tier=t)
+            self._r_burst.observe(k, tier=t)
 
     def on_finish(self, req) -> None:
         self.n_requests += 1
         self.total_new_tokens += req.n_generated
         self.last_finish = req.finish_time
+        ttft = e2e = None
         if req.first_token_time is not None and req.arrival_time is not None:
-            self.ttft.append(req.first_token_time - req.arrival_time)
+            ttft = req.first_token_time - req.arrival_time
+            self.ttft.append(ttft)
         if req.finish_time is not None and req.arrival_time is not None:
-            self.e2e.append(req.finish_time - req.arrival_time)
+            e2e = req.finish_time - req.arrival_time
+            self.e2e.append(e2e)
         if len(req.token_times) > 1:
             self.itl.extend(np.diff(np.asarray(req.token_times)).tolist())
+            self.itl_spread.extend(burst_spread_itl(
+                req.token_times, getattr(req, "token_dispatches", [])))
+        if self._reg is not None:
+            tier = getattr(req, "tier", None) or ""
+            self._r_finished.inc(tier=tier,
+                                 reason=req.finish_reason or "unknown")
+            self._r_tokens.inc(req.n_generated, tier=tier)
+            if ttft is not None:
+                self._r_ttft.observe(ttft)
+            if e2e is not None:
+                self._r_e2e.observe(e2e)
 
     # -- report ------------------------------------------------------------
     @property
@@ -110,14 +223,20 @@ class ServeMetrics:
             "n_requests": self.n_requests,
             "total_new_tokens": self.total_new_tokens,
             "wall_s": round(wall, 4),
+            # None (-> JSON null) when the busy window is empty: NaN is
+            # not RFC JSON and poisons every downstream json.loads
             "tokens_per_s": round(self.total_new_tokens / wall, 2)
-            if wall > 0 else float("nan"),
+            if wall > 0 else None,
             "slot_occupancy_mean": round(self.occupancy_mean, 4),
         }
         if self.topology is not None:
             out["topology"] = dict(self.topology)
         if self.tiers is not None:
             out["tiers"] = dict(self.tiers)
+            if self._occ_time:
+                out["tier_occupancy_mean"] = {
+                    t: round(v / self._occ_time, 4)
+                    for t, v in sorted(self._tier_occ.items())}
         if self.decode_dispatches:
             out["decode_dispatches"] = self.decode_dispatches
             out["decode_token_steps"] = self.decode_token_steps
@@ -141,4 +260,11 @@ class ServeMetrics:
                 out[f"{name}_mean_s"] = round(float(np.mean(xs)), 4)
                 out[f"{name}_p50_s"] = round(_pct(xs, 50), 4)
                 out[f"{name}_p95_s"] = round(_pct(xs, 95), 4)
+        if self.itl_spread:
+            # burst-spread estimate alongside the raw percentiles
+            # (identical to itl_* when every dispatch was K=1)
+            xs = self.itl_spread
+            out["itl_burst_spread_mean_s"] = round(float(np.mean(xs)), 4)
+            out["itl_burst_spread_p50_s"] = round(_pct(xs, 50), 4)
+            out["itl_burst_spread_p95_s"] = round(_pct(xs, 95), 4)
         return out

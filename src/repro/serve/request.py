@@ -69,9 +69,18 @@ class Request:
     finish_reason: Optional[str] = None      # eos | length | capacity
     # --- timing (scheduler clock; see metrics.py) ---
     arrival_time: Optional[float] = None
+    # when the request left WAITING (KV slot allocated).  Only stamped
+    # when the scheduler runs with observability attached (DESIGN.md §13)
+    # — the disabled path makes zero extra clock calls
+    admit_time: Optional[float] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     token_times: List[float] = dataclasses.field(default_factory=list)
+    # engine-dispatch id that emitted each token (parallel to
+    # token_times): tokens sharing an id surfaced from ONE decode burst,
+    # which is what the burst-spread ITL estimate and the tracer's
+    # per-dispatch attribution key on (metrics.py, obs/trace.py)
+    token_dispatches: List[int] = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)

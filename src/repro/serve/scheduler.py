@@ -45,6 +45,16 @@ scheduling logic itself is storage-agnostic — it sees alloc/free/lengths
 per pool, and a request's computation touches only its own tier's slab,
 so traffic at other tiers cannot perturb its tokens.
 
+**Observability** (DESIGN.md §13): ``Scheduler(engine, obs=...)`` attaches
+a ``repro.obs.Observability`` bundle — a Chrome-trace tracer (per-request
+lifecycle spans, per-dispatch prefill/burst events, queue/slot counter
+tracks), a metrics registry (the scheduler publishes gauges and counters;
+``ServeMetrics`` consumes the same registry), and a model-vs-measured
+step profiler.  All trace timestamps come from the scheduler's injectable
+clock, so two virtual-clock runs produce byte-identical trace files.
+``obs=None`` (default) is a strict no-op: zero extra clock calls, zero
+extra host syncs, zero extra dispatches (pinned by tests/test_obs.py).
+
 Determinism: sampling keys are per (request, step) — see request.py — and
 row computations are independent of batch composition (dense ops are
 row-wise; MoE decode routes each row as its own drop-free single-token
@@ -64,6 +74,8 @@ from typing import Callable, Deque, Dict, List, Mapping, Optional, Sequence, \
 
 import numpy as np
 
+from repro.obs.trace import PID_REQUESTS, PID_SCHEDULER
+
 from .kv_pool import KVCachePool
 from .metrics import ServeMetrics
 from .request import Request, RequestState, SamplingParams  # noqa: F401
@@ -76,13 +88,17 @@ class Scheduler:
                  clock: Callable[[], float] = time.monotonic,
                  max_burst: Optional[int] = None,
                  tiers: Union[None, Sequence[str],
-                              Mapping[str, Optional[int]]] = None):
+                              Mapping[str, Optional[int]]] = None,
+                 obs=None):
         """``tiers``: KV tiers this scheduler serves — a sequence of tier
         names (each pool sized by the engine's ServeConfig: explicit
         ``n_slots`` or budget-derived per tier) or a {tier: n_slots}
         mapping (None values fall back to the config sizing).  Default:
         one pool at the engine policy's tier.  ``pool`` injects a single
-        pre-built pool instead (mutually exclusive with ``tiers``)."""
+        pre-built pool instead (mutually exclusive with ``tiers``).
+        ``obs``: a ``repro.obs.Observability`` bundle (tracer / registry /
+        profiler / snapshot writer, each optional); None disables all of
+        it at zero cost."""
         self.engine = engine
         if pool is not None and tiers is not None:
             raise ValueError("give either pool= or tiers=, not both")
@@ -125,8 +141,47 @@ class Scheduler:
         self.waiting: Deque[Request] = deque()
         self.running: Dict[Tuple[str, int], Request] = {}  # (tier, slot)
         self.finished: List[Request] = []
+        self.obs = obs
+        self.tracer = obs.tracer if obs is not None else None
+        self.profiler = obs.profiler if obs is not None else None
+        # timing (clock pair around each engine dispatch) is needed iff
+        # someone consumes it; the disabled path takes neither clock call
+        self._timed = self.tracer is not None or self.profiler is not None
+        # stable Perfetto lane per tier on the scheduler process: tid 0 is
+        # the prefill lane, decode tiers get 1.. in sorted order
+        self._tier_tid = {t: 1 + i for i, t in enumerate(sorted(self.pools))}
+        if self.tracer is not None:
+            self.tracer.process_name(PID_REQUESTS, "requests")
+            self.tracer.process_name(PID_SCHEDULER, "scheduler")
+            self.tracer.thread_name(PID_SCHEDULER, 0, "prefill")
+            for t, tid in sorted(self._tier_tid.items()):
+                self.tracer.thread_name(PID_SCHEDULER, tid, f"decode:{t}")
+        registry = obs.registry if obs is not None else None
+        self._r_steps = self._r_queue = self._r_used = None
+        self._r_adm = self._r_chunks = self._r_syncs = None
+        self._syncs_published = 0
+        if registry is not None:
+            self._r_steps = registry.counter(
+                "serve_scheduler_steps_total", "scheduling rounds")
+            self._r_queue = registry.gauge(
+                "serve_queue_depth", "requests WAITING for a KV slot")
+            self._r_used = registry.gauge(
+                "serve_slots_used", "occupied KV slots, by tier")
+            slots_total = registry.gauge(
+                "serve_slots_total", "provisioned KV slots, by tier")
+            for t, p in sorted(self.pools.items()):
+                slots_total.set(p.n_slots, tier=t)
+            self._r_adm = registry.counter(
+                "serve_admissions_total",
+                "WAITING -> PREFILL transitions, by tier")
+            self._r_chunks = registry.counter(
+                "serve_prefill_chunks_total",
+                "prefill chunk dispatches, by tier")
+            self._r_syncs = registry.counter(
+                "serve_host_syncs_total",
+                "blocking device->host transfers on the serving hot path")
         self.metrics = ServeMetrics(
-            sum(p.n_slots for p in self.pools.values()))
+            sum(p.n_slots for p in self.pools.values()), registry=registry)
         if len(self.pools) > 1:
             self.metrics.tiers = {t: p.n_slots
                                   for t, p in self.pools.items()}
@@ -136,6 +191,12 @@ class Scheduler:
         self._clock = clock
         self._next_id = 0
         self.n_steps = 0
+        # monotone engine-dispatch id (prefill chunks and decode rounds
+        # share the sequence); stamped on every emitted token so the
+        # burst-spread ITL estimate and the tracer can attribute tokens
+        # to the dispatch that surfaced them.  Advances identically with
+        # obs on or off.
+        self._dispatch_seq = 0
         # device->host blocking transfers on the serving hot path: final
         # prefill-chunk logits, the first-token sample, one per decode
         # dispatch, and one per key-schedule build (temperature rows,
@@ -256,6 +317,12 @@ class Scheduler:
                 if req.prompt_padded is None:
                     req.prompt_padded, _ = self.engine.pad_prompt(req.prompt)
                 self.running[(req.tier, req.slot)] = req
+                # admit stamp feeds the WAITING span; gated so the
+                # disabled path makes zero extra clock calls
+                if self.tracer is not None:
+                    req.admit_time = self._clock()
+                if self._r_adm is not None:
+                    self._r_adm.inc(tier=req.tier)
             self.waiting = still
 
         # 2. one prefill chunk for the oldest mid-prefill request
@@ -264,19 +331,39 @@ class Scheduler:
         if pre:
             req = min(pre, key=lambda r: r.id)
             pool = self.pools[req.tier]
+            self._dispatch_seq += 1
+            start = req.prefill_pos
+            t0 = self._clock() if self._timed else 0.0
             chunk_logits = self.engine.prefill_chunk_into_slot(
-                pool, req.slot, req.prompt_padded, req.prefill_pos,
+                pool, req.slot, req.prompt_padded, start,
                 prompt_len=req.prompt_len)
             C = self.engine.scfg.prefill_chunk
-            req.prefill_pos = min(req.prefill_pos + C, req.prompt_len)
-            if req.prefill_pos >= req.prompt_len:
+            req.prefill_pos = min(start + C, req.prompt_len)
+            final = req.prefill_pos >= req.prompt_len
+            if final:
                 req.state = RequestState.DECODE
                 # two blocking transfers: the final-chunk logits and the
                 # sampled first token
                 self.n_host_syncs += 2
                 tok = sample_one(chunk_logits[(req.prompt_len - 1) % C],
                                  req.step_key(), req.sampling.temperature)
-                self._emit(req, tok, emitted, finished_now)
+            if self._timed:
+                t1 = self._clock()
+                n_tok = req.prefill_pos - start
+                if self.tracer is not None:
+                    self.tracer.complete(
+                        "prefill_chunk", t0, t1, pid=PID_SCHEDULER, tid=0,
+                        args={"req": req.id, "tier": req.tier, "pos": start,
+                              "tokens": n_tok, "final": final,
+                              "dispatch": self._dispatch_seq})
+                if self.profiler is not None:
+                    self.profiler.record_prefill(
+                        tier=req.tier, n_tokens=n_tok, wall_s=t1 - t0)
+            if self._r_chunks is not None:
+                self._r_chunks.inc(tier=req.tier)
+            if final:
+                self._emit(req, tok, emitted, finished_now,
+                           dispatch=self._dispatch_seq)
 
         # 3. one decode round (burst of K token-steps) per tier cohort
         dec = sorted((r for r in self.running.values()
@@ -291,9 +378,33 @@ class Scheduler:
                 self._decode_burst(cohort, pool, k, emitted, finished_now)
 
         self.n_steps += 1
+        now = self._clock()
         self.metrics.on_step(
-            self._clock(), sum(p.n_used for p in self.pools.values()))
+            now, {t: p.n_used for t, p in self.pools.items()})
+        if self.obs is not None:
+            self._obs_step(now)
         return {"emitted": emitted, "finished": finished_now}
+
+    def _obs_step(self, now: float) -> None:
+        """Post-round observability publication (obs-enabled path only):
+        scheduler gauges/counters into the registry, queue/slot counter
+        tracks into the trace, and the periodic snapshot tick."""
+        if self._r_steps is not None:
+            self._r_steps.inc()
+            self._r_queue.set(len(self.waiting))
+            for t, p in sorted(self.pools.items()):
+                self._r_used.set(p.n_used, tier=t)
+            # publish by delta so the counter stays monotone while
+            # n_host_syncs remains the raw baseline-pinned tally
+            self._r_syncs.inc(self.n_host_syncs - self._syncs_published)
+            self._syncs_published = self.n_host_syncs
+        if self.tracer is not None:
+            self.tracer.counter("queue_depth", now,
+                                {"waiting": len(self.waiting)})
+            self.tracer.counter(
+                "slots_used", now,
+                {t: self.pools[t].n_used for t in sorted(self.pools)})
+        self.obs.on_step(now)
 
     def _key_schedule(self, dec: List[Request], k: int,
                       keys: np.ndarray, temps: np.ndarray) -> None:
@@ -324,13 +435,19 @@ class Scheduler:
         for r in dec:
             tokens[r.slot] = r.last_token
         self._key_schedule(dec, 1, keys, temps)
+        self._dispatch_seq += 1
+        ctx = self._cohort_context(dec, pool)
+        t0 = self._clock() if self._timed else 0.0
         toks = self.engine.decode_slots(pool, tokens, keys[0], temps)
         self.n_host_syncs += 1
-        self.metrics.on_decode_burst(1, len(dec))
+        if self._timed:
+            self._obs_decode(dec, pool, 1, len(dec), ctx, t0, self._clock())
+        self.metrics.on_decode_burst(1, len(dec), tier=pool.kv_dtype)
         for r in dec:
             # the input token's KV was just written at lengths[slot]
             pool.lengths[r.slot] += 1
-            self._emit(r, int(toks[r.slot]), emitted, finished_now)
+            self._emit(r, int(toks[r.slot]), emitted, finished_now,
+                       dispatch=self._dispatch_seq)
 
     def _decode_burst(self, dec: List[Request], pool: KVCachePool, k: int,
                       emitted: List, finished_now: List[Request]) -> None:
@@ -351,10 +468,16 @@ class Scheduler:
             active[r.slot] = True
             rem[r.slot] = r.sampling.max_new_tokens - r.n_generated
         self._key_schedule(dec, k, keys, temps)
+        self._dispatch_seq += 1
+        ctx = self._cohort_context(dec, pool)
+        t0 = self._clock() if self._timed else 0.0
         toks, valid = self.engine.decode_burst(
             pool, tokens, keys, temps, active, rem, eos)
         self.n_host_syncs += 1
-        self.metrics.on_decode_burst(k, int(valid.sum()))
+        n_emit = int(valid.sum())
+        if self._timed:
+            self._obs_decode(dec, pool, k, n_emit, ctx, t0, self._clock())
+        self.metrics.on_decode_burst(k, n_emit, tier=pool.kv_dtype)
         # slots are captured before emission: _emit may retire a request
         # mid-replay (clearing req.slot), but its already-emitted burst
         # tokens are still addressed by the slot it occupied on device
@@ -363,7 +486,37 @@ class Scheduler:
             for r, slot in rows:
                 if valid[t, slot]:
                     # engine.decode_burst already committed pool.lengths
-                    self._emit(r, int(toks[t, slot]), emitted, finished_now)
+                    self._emit(r, int(toks[t, slot]), emitted, finished_now,
+                               dispatch=self._dispatch_seq)
+
+    def _cohort_context(self, dec: List[Request], pool: KVCachePool) -> int:
+        """Mean committed context across a cohort BEFORE its dispatch —
+        what the analytical model prices the round's KV streaming at.
+        Host-side numpy only; called on the obs-enabled path."""
+        if self.profiler is None:
+            return 0
+        return int(round(float(
+            np.mean([pool.lengths[r.slot] for r in dec]))))
+
+    def _obs_decode(self, dec: List[Request], pool: KVCachePool, k: int,
+                    n_emit: int, ctx: int, t0: float, t1: float) -> None:
+        """Per-dispatch observability for one tier cohort's decode round:
+        a trace slice on the tier's lane and a profiler record (t1 - t0
+        spans the jitted dispatch INCLUDING its blocking device->host
+        transfer — the burst's true host-visible wall)."""
+        tier = pool.kv_dtype
+        if self.profiler is not None:
+            self.profiler.record_decode(
+                tier=tier, k=k, rows=len(dec), context=ctx,
+                kv_bytes_per_token=pool.bytes_per_token, wall_s=t1 - t0)
+        if self.tracer is not None:
+            self.tracer.complete(
+                "decode_burst", t0, t1, pid=PID_SCHEDULER,
+                tid=self._tier_tid[tier],
+                args={"tier": tier, "k": k, "rows": len(dec),
+                      "emitted": n_emit,
+                      "slots": sorted(r.slot for r in dec),
+                      "dispatch": self._dispatch_seq})
 
     def run(self, max_steps: Optional[int] = None) -> None:
         """Step until every submitted request is FINISHED."""
@@ -376,10 +529,11 @@ class Scheduler:
 
     # ------------------------------------------------------------------
     def _emit(self, req: Request, tok: int, emitted: List,
-              finished_now: List[Request]) -> None:
+              finished_now: List[Request], dispatch: int = -1) -> None:
         now = self._clock()
         req.output_tokens.append(tok)
         req.token_times.append(now)
+        req.token_dispatches.append(dispatch)
         if req.first_token_time is None:
             req.first_token_time = now
         emitted.append((req, req.slot, tok))
@@ -406,3 +560,30 @@ class Scheduler:
         self.finished.append(req)
         finished_now.append(req)
         self.metrics.on_finish(req)
+        if self.tracer is not None:
+            self._trace_request(req)
+
+    def _trace_request(self, req: Request) -> None:
+        """Emit the request's lifecycle spans at retirement — the spans
+        are reconstructed from the timestamps the hot path already
+        stamped, so tracing adds nothing per token."""
+        tr = self.tracer
+        tid = req.id or 0
+        tr.thread_name(PID_REQUESTS, tid, f"req {tid}")
+        a, ad = req.arrival_time, req.admit_time
+        ft, fin = req.first_token_time, req.finish_time
+        if a is not None and ad is not None:
+            tr.complete("WAITING", a, ad, pid=PID_REQUESTS, tid=tid,
+                        args={"tier": req.tier})
+        if ad is not None and ft is not None:
+            tr.complete("PREFILL", ad, ft, pid=PID_REQUESTS, tid=tid,
+                        args={"prompt_len": req.prompt_len})
+        if ft is not None and fin is not None:
+            tr.complete("DECODE", ft, fin, pid=PID_REQUESTS, tid=tid,
+                        args={"n_generated": req.n_generated})
+        if ft is not None:
+            tr.instant("first_token", ft, pid=PID_REQUESTS, tid=tid)
+        if fin is not None:
+            tr.instant("finished", fin, pid=PID_REQUESTS, tid=tid,
+                       args={"reason": req.finish_reason,
+                             "n_generated": req.n_generated})
