@@ -28,6 +28,10 @@ produced exactly that way:
     python benchmarks/serve_bench.py --tiers bf16,int8 --d-head 128 \
         --cache-budget-mb 1 --requests 8 --rate 2 --seed 0 --max-new 16 \
         --max-burst 8 --baseline-json benchmarks/BENCH_serve_baseline.json
+    # ... and the weight-kernel pair (DESIGN.md §14) — the first regime at
+    # --weight-kernel on (packed Pallas kernels on the decode weight path)
+    # and --weight-kernel off (jnp dequantize-then-dot), so the baseline
+    # records the serving metrics of BOTH weight paths
 
 ``--max-burst`` caps the device-resident decode burst (DESIGN.md §11);
 each point reports ``decode_dispatches_per_token``, ``host_syncs_per_token``
@@ -99,6 +103,14 @@ def build_engine(args, cfg, params, kv_dtype, mesh, policy=None):
     elif policy.kv != kv_dtype:
         # --policy + a --kv-dtype sweep: each point re-tiers the policy
         policy = dataclasses.replace(policy, kv=kv_dtype)
+    if args.weight_kernel != "auto":
+        # --weight-kernel on|off pins the decode-step weight path: 'on'
+        # routes quantized linears through the packed Pallas kernels
+        # (packed_gemv/w8a8_matmul, DESIGN.md §14), 'off' pins the jnp
+        # dequantize-then-dot fallback.  'auto' keeps the policy default
+        # (pallas under a multi-device mesh, jnp meshless).
+        policy = dataclasses.replace(
+            policy, kernel={"on": "pallas", "off": "jnp"}[args.weight_kernel])
     # NOTE: pool geometry (max_len, and any budget-derived slot count) is a
     # pure function of the workload shape — NOT of --max-burst — so sweep
     # points at different burst caps measure dispatch amortization against
@@ -149,9 +161,12 @@ def warmup(engine, prompts, max_new, tiers=None):
             sched.run(max_steps=200)
 
 
-def point_label(cfg, kv_dtype, tiers, max_burst):
+def point_label(cfg, kv_dtype, tiers, max_burst, weight_kernel="auto"):
     label = "+".join(tiers) if tiers else kv_dtype
-    return f"serve_{cfg.name}_{label.replace('+', '-')}_burst{max_burst}"
+    stem = f"serve_{cfg.name}_{label.replace('+', '-')}_burst{max_burst}"
+    if weight_kernel != "auto":
+        stem += f"_wk{weight_kernel}"   # --weight-kernel on|off points
+    return stem
 
 
 def run_point(args, cfg, engine, kv_dtype, tiers=None):
@@ -180,7 +195,8 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None):
     if args.trace_dir:
         os.makedirs(args.trace_dir, exist_ok=True)
         stem = os.path.join(args.trace_dir,
-                            point_label(cfg, kv_dtype, tiers, args.max_burst))
+                            point_label(cfg, kv_dtype, tiers, args.max_burst,
+                                        args.weight_kernel))
         obs.tracer = Tracer()
         obs.registry = MetricsRegistry()
         obs.snapshots = SnapshotWriter(obs.registry, stem + ".metrics.jsonl")
@@ -253,6 +269,7 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None):
     # (decode_dispatches_per_token and burst_hist come from the metrics
     # report itself)
     rep["max_burst"] = sched.max_burst
+    rep["weight_kernel"] = engine.policy.kernel
     rep["host_syncs"] = sched.n_host_syncs
     if rep.get("total_new_tokens"):
         rep["host_syncs_per_token"] = round(
@@ -304,6 +321,13 @@ def main():
                          "assigned tiers round-robin via Request.kv_policy "
                          "(DESIGN.md §12).  One mixed point instead of a "
                          "per-dtype sweep")
+    ap.add_argument("--weight-kernel", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="decode-step quantized weight path: 'on' pins the "
+                         "packed Pallas kernels, 'off' pins the jnp "
+                         "dequantize-then-dot fallback, 'auto' keeps the "
+                         "policy default (pallas under a multi-device "
+                         "mesh, jnp meshless) — DESIGN.md §14")
     ap.add_argument("--policy", default=None, metavar="POLICY_JSON",
                     help="path to a PrecisionPolicy JSON for the engine "
                          "(weight patterns + kv tier + kernel); legacy "
@@ -380,7 +404,8 @@ def main():
             os.makedirs(args.out_dir, exist_ok=True)
             path = os.path.join(
                 args.out_dir,
-                point_label(cfg, kv_dtype, tiers, args.max_burst) + ".json")
+                point_label(cfg, kv_dtype, tiers, args.max_burst,
+                            args.weight_kernel) + ".json")
             with open(path, "w") as f:
                 json.dump(rep, f, indent=2, allow_nan=False)
             print(f"== wrote {path}")

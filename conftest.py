@@ -13,12 +13,12 @@ import pytest  # noqa: E402
 
 
 @pytest.fixture(autouse=True)
-def _rearm_kernel_downgrade_warning():
-    """The Pallas-under-partitioning downgrade warns once per PROCESS
-    (``kernels/ops.py`` latch) — without a per-test reset, whichever test
-    first triggers the downgrade consumes the warning and any later test
-    asserting on it fails depending on collection order.  Re-arm the
-    latch before every test so warn-assertions are order-independent."""
-    from repro.kernels.ops import reset_downgrade_warning
-    reset_downgrade_warning()
+def _reset_kernel_site_warnings():
+    """Kernel fallback warnings fire once per SITE per process
+    (``kernels/ops.py`` site registry) — without a per-test reset, whichever
+    test first triggers a fallback consumes that site's warning and any
+    later test asserting on it fails depending on collection order.  Clear
+    the registry before every test so warn-assertions are order-independent."""
+    from repro.kernels.ops import reset_site_warnings
+    reset_site_warnings()
     yield

@@ -201,3 +201,70 @@ def gqa_decode_attention(q, k_cache, v_cache, kv_valid_len, *, bk=None,
         interpret=interpret,
     )(*args)
     return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mesh entry point: the kernel under shard_map (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+def decode_attention_shard_specs(mesh, b: int, hk: int, quant: bool):
+    """(q_spec, kv_spec, len_spec, out_spec) for sharding the decode
+    kernel over a serving mesh: slot rows on the data axis, KV heads on
+    'model' — the ``serve_pool_pspec`` layout, with the same divisibility
+    guards (a non-dividing axis stays replicated; redundant compute, never
+    a wrong shape).  ``kv_spec`` mirrors the cache pytree: a
+    ``QuantizedKV`` node of specs for packed pools, a bare spec for bf16.
+
+    The query head axis shards with the KV head axis: ``_prep_queries``
+    groups query heads contiguously per KV head (h -> group h // rep), so
+    an even split of H lands each shard exactly the query heads of its own
+    KV heads.
+    """
+    from jax.sharding import PartitionSpec as P
+    axes = dict(mesh.shape)
+    dp, tp = axes.get("data", 1), axes.get("model", 1)
+    slot_ax = "data" if dp > 1 and b % dp == 0 and b >= dp else None
+    head_ax = "model" if tp > 1 and hk % tp == 0 and hk >= tp else None
+    q_spec = P(slot_ax, None, head_ax, None)
+    if quant:
+        kv_spec = QuantizedKV(P(slot_ax, None, head_ax, None),
+                              P(slot_ax, None, head_ax), "")
+    else:
+        kv_spec = P(slot_ax, None, head_ax, None)
+    return q_spec, kv_spec, P(slot_ax), q_spec
+
+
+def sharded_gqa_decode_attention(q, k_cache, v_cache, kv_valid_len, *, mesh,
+                                 bk=None, interpret: bool = True):
+    """``gqa_decode_attention`` under ``shard_map`` over the serving mesh.
+
+    Each shard runs the unmodified kernel on its local
+    [B/dp, Sk, Hk/tp, ...] slab — the softmax is per (row, head) and the
+    KV sequence axis stays whole, so there is no cross-shard collective
+    and the sharded output is BITWISE identical to the meshless kernel
+    (hence to ``ref.decode_attention_ref``, the §9 contract).
+
+    When NO axis actually shards (the divisibility guards leave every
+    spec replicated — e.g. 2 KV heads on an 8-way model axis with dp=1),
+    the kernel runs bare: GSPMD keeps a replicated custom call replicated,
+    whereas a degenerate all-replicated shard_map only perturbs the
+    partitioner's choices around it (observed as ulp-level drift in the
+    surrounding matmuls at tp=8).
+    """
+    from jax.experimental.shard_map import shard_map
+    b, _, h, dh = q.shape
+    quant = isinstance(k_cache, QuantizedKV)
+    hk = (k_cache.packed if quant else k_cache).shape[2]
+    q_spec, kv_spec, len_spec, out_spec = decode_attention_shard_specs(
+        mesh, b, hk, quant)
+    if all(ax is None for ax in q_spec):   # nothing shards: skip shard_map
+        return gqa_decode_attention(q, k_cache, v_cache, kv_valid_len,
+                                    bk=bk, interpret=interpret)
+    if quant:  # carry the real scheme name so spec/cache trees match
+        kv_spec = QuantizedKV(kv_spec.packed, kv_spec.scales,
+                              k_cache.scheme_name)
+    fn = shard_map(
+        functools.partial(gqa_decode_attention, bk=bk, interpret=interpret),
+        mesh=mesh,
+        in_specs=(q_spec, kv_spec, kv_spec, len_spec),
+        out_specs=out_spec, check_rep=False)
+    return fn(q, k_cache, v_cache, jnp.asarray(kv_valid_len, jnp.int32))

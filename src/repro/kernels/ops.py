@@ -7,32 +7,39 @@ identical — packed weights either way, so HBM traffic (the roofline memory
 term) is the same; the Pallas path is the TPU-target fast path validated
 under interpret=True.
 
-Execution policy (DESIGN.md §12).  Dispatch is driven by ONE module-level
-execution record instead of the two historical booleans
-(``models.common.set_use_kernel`` / ``set_under_partitioning``):
+Execution policy (DESIGN.md §12, §14).  Dispatch is driven by ONE
+module-level execution record:
 
-    _EXEC = {mode: 'jnp'|'pallas', partitioned: bool}
+    _EXEC = {mode: 'auto'|'jnp'|'pallas', mesh: Mesh|None, partitioned: bool}
 
-``declare_execution(kernel=..., partitioned=...)`` is the single writer —
-drivers resolve a ``PrecisionPolicy.kernel`` ('auto' leaves the mode
-untouched; 'jnp'/'pallas' pin it) and declare their mesh before tracing.
-``active_kernel()`` is the single trace-time reader, with the mesh
-downgrade folded in: the Pallas kernels index global array shapes and are
-not GSPMD-partitionable — traced under a multi-device mesh they would run
-per shard against shard-local views (wrong shapes, wrong results), so
-``partitioned=True`` downgrades 'pallas' to the jnp path with a loud
-warning (once per process; mesh decode loops would otherwise spam one
-warning per traced step) instead of a silent wrong answer (DESIGN.md §10).
+``declare_execution(kernel=..., mesh=...)`` is the single writer — drivers
+resolve a ``PrecisionPolicy.kernel`` and declare their mesh before tracing.
+Under a declared multi-device mesh the Pallas kernels run inside
+``shard_map``: each shard executes the unmodified kernel on its
+shard-local block (KV heads / slots for decode attention; the
+N- or K-sharded packed weight panel for the matvec path), so 'pallas' is a
+first-class mesh citizen (DESIGN.md §14) — the historical blanket
+downgrade is gone.  ``kernel: 'auto'`` resolves to the jnp reference path
+on a single device (the bit-exact baseline) and to pallas under a mesh.
+
+What remains of the downgrade is PER-SITE: a call site whose shard-local
+shapes cannot tile the kernel legally — or that has no registered
+sharding spec (stacked-expert leaves, ad-hoc callers) — falls back to the
+jnp path with a warning keyed by the site (once per site per process;
+other sites in the same trace keep the kernel).  ``partitioned=True``
+without a mesh (the legacy shim spelling) still downgrades every site:
+with no mesh object there is nothing to shard_map over.
 
 ``set_use_kernel`` (models/common.py) and ``set_under_partitioning`` /
 ``kernel_allowed`` below survive as thin deprecation shims over
-``declare_execution`` / ``active_kernel`` — no serve-path code calls them.
+``declare_execution`` — no serve-path code calls them.
 """
 from __future__ import annotations
 
 import warnings
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.quant.schemes import (
@@ -40,28 +47,48 @@ from repro.quant.schemes import (
 )
 from . import ref
 from .decode_attention import gqa_decode_attention  # noqa: F401  (re-export)
-from .packed_matmul import packed_gemv, packed_matmul, w8a8_matmul
+from .packed_matmul import (
+    packed_gemv, packed_matmul, packed_shapes_legal, w8a8_matmul,
+)
 from .xtramac_mac import virtual_dsp_multiply  # noqa: F401  (re-export)
 
-_EXEC = {"mode": "jnp", "partitioned": False, "warned": False}
+_UNSET = object()
+
+_EXEC = {"mode": "auto", "mesh": None, "partitioned": False}
+# leaf name -> {'packed': (k_ax, n_ax), 'scales': (k_ax, n_ax)} mesh axes
+# for the shard_map'd weight kernels (partitioning.serve_weight_kernel_specs)
+_WSPECS = {"map": None}
+_WARNED_SITES: set = set()
 
 
 def declare_execution(*, kernel: Optional[str] = None,
-                      partitioned: Optional[bool] = None) -> None:
+                      partitioned: Optional[bool] = None,
+                      mesh=_UNSET, weight_specs=_UNSET) -> None:
     """Declare the execution context for subsequent traces.
 
-    ``kernel``: 'jnp' | 'pallas' pin the dispatch mode; 'auto' / None
-    leave it as-is (the backend default — today the jnp reference path
-    unless a driver pinned 'pallas').  ``partitioned``: whether model
-    steps are traced under a multi-device mesh; None leaves it as-is.
+    ``kernel``: 'jnp' | 'pallas' pin the dispatch mode; 'auto' resets it
+    to the backend default (jnp on a single device, pallas under a mesh);
+    None leaves it as-is (so an engine with an 'auto' policy inherits
+    whatever a driver pinned).  ``mesh``: the jax.sharding.Mesh model
+    steps are traced under (None = single device) — setting it also sets
+    ``partitioned``.  ``weight_specs``: the per-leaf kernel sharding map
+    from ``partitioning.serve_weight_kernel_specs`` (None to clear).
+    ``partitioned`` alone (no mesh) is the legacy shim spelling: it marks
+    partitioned execution with nothing to shard_map over, so every kernel
+    site falls back to jnp (with a per-site warning).
     """
-    if kernel in ("jnp", "pallas"):
+    if kernel in ("jnp", "pallas", "auto"):
         _EXEC["mode"] = kernel
-    elif kernel not in (None, "auto"):
+    elif kernel is not None:
         raise ValueError(
             f"kernel={kernel!r}; valid: 'auto', 'jnp', 'pallas'")
     if partitioned is not None:
         _EXEC["partitioned"] = bool(partitioned)
+    if mesh is not _UNSET:
+        _EXEC["mesh"] = mesh
+        _EXEC["partitioned"] = mesh is not None and mesh.size > 1
+    if weight_specs is not _UNSET:
+        _WSPECS["map"] = weight_specs
 
 
 def kernel_mode() -> str:
@@ -72,38 +99,177 @@ def under_partitioning() -> bool:
     return _EXEC["partitioned"]
 
 
-def reset_downgrade_warning() -> None:
-    """Re-arm the once-per-process downgrade warning (tests)."""
-    _EXEC["warned"] = False
+def active_mesh():
+    """The declared mesh when it is multi-device, else None."""
+    m = _EXEC["mesh"]
+    return m if (m is not None and m.size > 1) else None
+
+
+def resolved_kernel_mode() -> str:
+    """'auto' resolved: jnp on a single device (the bit-exact baseline),
+    pallas under a declared multi-device mesh (the serving fast path —
+    per-site legality still applies)."""
+    mode = _EXEC["mode"]
+    if mode != "auto":
+        return mode
+    return "pallas" if active_mesh() is not None else "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Per-site fallback warnings (replaces the per-process downgrade latch)
+# ---------------------------------------------------------------------------
+def _warn_site(site: str, msg: str) -> None:
+    if site in _WARNED_SITES:
+        return
+    _WARNED_SITES.add(site)
+    warnings.warn(
+        f"kernel site {site!r} falls back to the jnp path: {msg} "
+        "(same math, packed weights either way; warned once per site)",
+        stacklevel=3)
+
+
+def reset_site_warnings() -> None:
+    """Re-arm the per-site fallback warnings (tests)."""
+    _WARNED_SITES.clear()
 
 
 def kernel_allowed(use_kernel: bool) -> bool:
-    """``use_kernel``, downgraded when partitioning is active — the mesh
-    guard applied to an explicit kernel request.  Warns ONCE per process
-    (module-level latch)."""
+    """Deprecated shim for EXPLICIT ``use_kernel`` bools: a raw kernel
+    request is downgraded whenever partitioned execution is declared —
+    direct callers bypass the shard_map dispatch, so running the bare
+    kernel under a mesh would index shard-local views with global shapes.
+    Policy-driven dispatch (``use_kernel=None``) shard_maps instead."""
     if use_kernel and _EXEC["partitioned"]:
-        if not _EXEC["warned"]:
-            _EXEC["warned"] = True
-            warnings.warn(
-                "use_kernel=True under mesh partitioning: Pallas kernels "
-                "are not GSPMD-partitionable; falling back to the jnp "
-                "reference path (same math, packed weights either way). "
-                "Further downgrades in this process stay silent.",
-                stacklevel=3)
+        _warn_site(
+            "<explicit use_kernel>",
+            "explicit use_kernel=True under partitioned execution; use the "
+            "policy dispatch (use_kernel=None), which shard_maps the kernel "
+            "over the declared mesh")
         return False
     return use_kernel
 
 
 def active_kernel() -> bool:
-    """The trace-time kernel decision: Pallas iff the declared mode is
-    'pallas' AND no multi-device mesh is active (downgrade folded in)."""
-    return kernel_allowed(_EXEC["mode"] == "pallas")
+    """Whether this trace dispatches Pallas at eligible sites: the
+    resolved mode is 'pallas' and (meshless, or a mesh is declared for
+    shard_map).  Per-site shape legality is checked at each site."""
+    if resolved_kernel_mode() != "pallas":
+        return False
+    return not (_EXEC["partitioned"] and _EXEC["mesh"] is None)
 
 
 # --- deprecation shim (pre-policy API; serve path no longer calls it) ------
 def set_under_partitioning(flag: bool) -> None:
-    """Deprecated: use ``declare_execution(partitioned=...)``."""
+    """Deprecated: use ``declare_execution(mesh=...)``."""
     declare_execution(partitioned=flag)
+
+
+# ---------------------------------------------------------------------------
+# Decode-attention dispatch (the models/attention.py gate)
+# ---------------------------------------------------------------------------
+def fused_decode_attention(q, k_cache, v_cache, kv_valid_len):
+    """The fused Pallas flash-decode when the execution policy selects it,
+    else None (the caller takes the einsum path).  Under a declared mesh
+    the kernel runs inside ``shard_map`` — slots on 'data', KV heads on
+    'model', the ``serve_pool_pspec`` layout — and is bitwise identical
+    to the meshless kernel (no cross-shard collective; DESIGN.md §14)."""
+    if resolved_kernel_mode() != "pallas":
+        return None
+    mesh = _EXEC["mesh"]
+    if _EXEC["partitioned"] and mesh is None:
+        _warn_site(
+            "decode_attention",
+            "pallas under partitioned execution with no declared mesh — "
+            "nothing to shard_map over")
+        return None
+    if mesh is not None and mesh.size > 1:
+        from .decode_attention import sharded_gqa_decode_attention
+        return sharded_gqa_decode_attention(q, k_cache, v_cache,
+                                            kv_valid_len, mesh=mesh)
+    return gqa_decode_attention(q, k_cache, v_cache, kv_valid_len)
+
+
+# ---------------------------------------------------------------------------
+# Weight-path dispatch
+# ---------------------------------------------------------------------------
+def _axis_size(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    size = 1
+    for a in (ax if isinstance(ax, tuple) else (ax,)):
+        size *= mesh.shape[a]
+    return size
+
+
+def _mesh_quantized_matmul(x2, qw: QuantizedLinearWeights, mesh,
+                           interpret: bool, site: str):
+    """The packed kernel under ``shard_map`` over the declared mesh, with
+    specs from the registered per-leaf map; None when this site must fall
+    back to the jnp path (no spec / illegal shard-local shapes).
+
+    Activations stay replicated across the mesh (the serving matvec is
+    weight-bound; sharding x rows would flip the GEMV/matmul block plan
+    per data shard and break the meshless bit-exactness contract).
+    N-sharded weights run a local kernel and keep the output N-sharded —
+    bitwise equal to the meshless kernel (the K loop is untouched).
+    K-sharded weights (split at the joint code-word/scale-group
+    boundaries ``param_specs`` enforces) compute f32 partials and psum
+    over the model axis — ``ref.sharded_packed_matmul_ref`` is the
+    matching oracle.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    scheme = qw.scheme
+    k, n = qw.shape
+    entry = (_WSPECS["map"] or {}).get(qw.name) if qw.name else None
+    if entry is None:
+        _warn_site(site, "no kernel sharding spec registered for this "
+                   "weight under the declared mesh (stacked-expert leaf "
+                   "or unregistered call site)")
+        return None
+    k_ax, n_ax = entry["packed"]
+    sk_ax = entry["scales"][0]
+    ksz, nsz = _axis_size(mesh, k_ax), _axis_size(mesh, n_ax)
+
+    if scheme.name == "w8a8":
+        if k_ax is not None:   # per-channel scales cannot K-shard
+            _warn_site(site, "w8a8 weights cannot K-shard (per-channel "
+                       "scales have no K rows to split)")
+            return None
+        x_codes, x_scale = quantize_activations_int8(x2)
+        if nsz == 1:   # nothing shards: bare kernel (GSPMD replicates it)
+            return w8a8_matmul(x_codes, x_scale, qw.packed, qw.scales,
+                               interpret=interpret)
+        fn = shard_map(
+            lambda xc, xs, wc, ws: w8a8_matmul(xc, xs, wc, ws,
+                                               interpret=interpret),
+            mesh=mesh,
+            in_specs=(P(None, None), P(), P(None, n_ax), P(None, n_ax)),
+            out_specs=P(None, n_ax), check_rep=False)
+        return fn(x_codes, x_scale, qw.packed, qw.scales)
+
+    if not packed_shapes_legal(x2.shape[0], k // ksz, n // nsz, scheme):
+        _warn_site(site, f"shard-local shapes (K={k // ksz}, N={n // nsz}) "
+                   "cannot tile the packed kernel")
+        return None
+    per = 32 // scheme.weight_bits
+    gemv = x2.shape[0] <= 8   # same block-plan predicate as meshless
+    if ksz == 1 and nsz == 1:  # nothing shards: bare kernel, no shard_map
+        return (packed_gemv if gemv else packed_matmul)(
+            x2, qw, interpret=interpret)
+
+    def local_mm(x2, packed, scales):
+        qloc = QuantizedLinearWeights(
+            scheme, packed, scales, (packed.shape[0] * per, packed.shape[1]))
+        out = (packed_gemv if gemv else packed_matmul)(
+            x2, qloc, interpret=interpret)
+        return jax.lax.psum(out, k_ax) if k_ax is not None else out
+
+    fn = shard_map(local_mm, mesh=mesh,
+                   in_specs=(P(None, k_ax), P(k_ax, n_ax), P(sk_ax, n_ax)),
+                   out_specs=P(None, n_ax), check_rep=False)
+    return fn(x2, qw.packed, qw.scales)
 
 
 def quantized_matmul(x, qw: QuantizedLinearWeights, *,
@@ -112,15 +278,15 @@ def quantized_matmul(x, qw: QuantizedLinearWeights, *,
     """x [..., K] @ quantized W [K, N] -> [..., N] in ``out_dtype``.
 
     ``use_kernel=None`` (the model layer's call) dispatches on the active
-    execution policy; an explicit bool overrides the mode but still takes
-    the mesh downgrade.  Scheme dispatch (paper Table I):
+    execution policy — shard_map'd over the declared mesh, falling back
+    per-site; an explicit bool overrides the mode but is downgraded under
+    partitioned execution (``kernel_allowed``).  Scheme dispatch (paper
+    Table I):
       awq_int4 / mxfp4 : INTx/FP4 x BF16 -> packed sub-byte kernel
       fp8              : FP8 weights (per-channel scale) -> packed kernel
       w8a8             : INT8 x INT8 -> INT32 (activations quantized here)
       bf16             : dense bf16 matmul (attention-path MACs)
     """
-    use_kernel = active_kernel() if use_kernel is None \
-        else kernel_allowed(use_kernel)
     scheme = qw.scheme
     lead = x.shape[:-1]
     k = x.shape[-1]
@@ -128,7 +294,26 @@ def quantized_matmul(x, qw: QuantizedLinearWeights, *,
 
     if scheme.name == "bf16":
         out = jnp.dot(x2.astype(jnp.bfloat16), qw.packed)
-    elif scheme.name == "w8a8":
+        return out.reshape(*lead, -1).astype(out_dtype)
+
+    if use_kernel is None:
+        use_kernel = resolved_kernel_mode() == "pallas"
+        site = qw.name or f"<{scheme.name} linear K={k}>"
+        if use_kernel:
+            mesh = _EXEC["mesh"]
+            if _EXEC["partitioned"] and mesh is None:
+                _warn_site(site, "pallas under partitioned execution with "
+                           "no declared mesh — nothing to shard_map over")
+                use_kernel = False
+            elif mesh is not None and mesh.size > 1:
+                out = _mesh_quantized_matmul(x2, qw, mesh, interpret, site)
+                if out is not None:
+                    return out.reshape(*lead, -1).astype(out_dtype)
+                use_kernel = False
+    else:
+        use_kernel = kernel_allowed(use_kernel)
+
+    if scheme.name == "w8a8":
         x_codes, x_scale = quantize_activations_int8(x2)
         if use_kernel:
             out = w8a8_matmul(x_codes, x_scale, qw.packed, qw.scales,

@@ -26,7 +26,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.quant.schemes import QuantScheme, QuantizedLinearWeights
+from repro.quant.schemes import (
+    QuantScheme, QuantizedLinearWeights, effective_group,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -101,6 +103,44 @@ def _pick(block: int, dim: int) -> int:
     return min(block, dim)
 
 
+def _fit_block(dim: int, want: int, quantum: int = 1) -> int:
+    """Largest block <= ``want`` that divides ``dim`` and is a multiple of
+    ``quantum`` (the code-packing word / scale group).  Falls back to
+    ``dim`` itself (one block) when no smaller aligned divisor exists —
+    irregular dims cost tiling efficiency, never correctness."""
+    want = min(want, dim)
+    for cand in range(want - want % quantum, 0, -quantum):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def packed_block_plan(m: int, k: int, n: int, scheme: QuantScheme, *,
+                      bm: int = 128, bn: int = 128, bk: int = 512):
+    """The (bm, bn, bk) tiling ``packed_matmul`` uses for these shapes.
+
+    Exported so the bit-exact oracle (``ref.packed_matmul_tiled_ref``) can
+    replay the exact same grid: per-element results depend on the K-block
+    accumulation order and the per-tile dot shapes, so oracle and kernel
+    must agree on the plan, not just the math."""
+    group = effective_group(scheme.group_size, k)
+    per = 32 // scheme.weight_bits
+    # K blocks land on scale-group boundaries when the matrix has several
+    # groups, else (per-channel: one global scale row) on word boundaries
+    quantum = group if group < k else per
+    return (_fit_block(m, bm), _fit_block(n, bn), _fit_block(k, bk, quantum))
+
+
+def packed_shapes_legal(m: int, k: int, n: int, scheme: QuantScheme) -> bool:
+    """Whether (possibly shard-local) shapes can run the packed kernel:
+    K must pack whole int32 words and whole scale groups.  The per-site
+    fallback predicate for mesh dispatch (kernels/ops.py)."""
+    if m < 1 or n < 1 or k < 1:
+        return False
+    per = 32 // scheme.weight_bits
+    return k % per == 0 and k % effective_group(scheme.group_size, k) == 0
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("scheme_name", "k", "n", "bm", "bn", "bk", "interpret"),
@@ -111,7 +151,7 @@ def _packed_matmul_impl(x, packed, scales, *, scheme_name: str, k: int, n: int,
     scheme = get_scheme(scheme_name)
     m = x.shape[0]
     per = 32 // scheme.weight_bits
-    group = k if scheme.group_size == -1 else scheme.group_size
+    group = effective_group(scheme.group_size, k)
     grid = (m // bm, n // bn, k // bk)
     ng = bk // group if group <= bk else 1
     if group > bk:  # per-channel (group == k): one scale row for all k-blocks
@@ -142,11 +182,8 @@ def packed_matmul(x, qw: QuantizedLinearWeights, *, bm: int = 128, bn: int = 128
     m = x.shape[0]
     scheme = qw.scheme
     assert scheme.packed, "packed_matmul requires a sub-byte scheme"
-    group = k if scheme.group_size == -1 else scheme.group_size
-    bm, bn = _pick(bm, m), _pick(bn, n)
-    bk = _pick(bk, k)
-    if group <= bk:
-        bk = (bk // group) * group
+    assert packed_shapes_legal(m, k, n, scheme), (m, k, n, scheme.name)
+    bm, bn, bk = packed_block_plan(m, k, n, scheme, bm=bm, bn=bn, bk=bk)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
     return _packed_matmul_impl(
         x, qw.packed, qw.scales, scheme_name=scheme.name, k=k, n=n,
@@ -205,7 +242,7 @@ def w8a8_matmul(x_codes, x_scale, w_codes, w_scales, *, bm: int = 128,
     """
     m, k = x_codes.shape
     n = w_codes.shape[1]
-    bm, bn, bk = _pick(bm, m), _pick(bn, n), _pick(bk, k)
+    bm, bn, bk = _fit_block(m, bm), _fit_block(n, bn), _fit_block(k, bk)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
     acc = _w8a8_impl(x_codes, w_codes, bm=bm, bn=bn, bk=bk, interpret=interpret)
     return acc.astype(jnp.float32) * (w_scales * x_scale)

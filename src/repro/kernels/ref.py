@@ -27,6 +27,97 @@ def packed_gemv_ref(x, qw: QuantizedLinearWeights):
     return packed_matmul_ref(x, qw)
 
 
+def packed_matmul_tiled_ref(x, qw: QuantizedLinearWeights, *, bm: int = 128,
+                            bn: int = 128, bk: int = 512):
+    """BIT-exact oracle for ``packed_matmul``: replays the kernel's grid.
+
+    Same tiling (``packed_block_plan``), same arithmetic decode
+    (``decode_codes_arith`` — shift/mask, DAZ, shared with the kernel
+    body), same per-group scaling, same per-tile f32 dot shapes and same
+    K-block accumulation order, as plain jnp loops.  f32 sums are not
+    associative, so agreeing on the *plan* is what upgrades the
+    dequant-LUT ``packed_matmul_ref`` tolerance contract to a bitwise one
+    (the DESIGN.md §14 analogue of the §9 decode-attention contract).
+    """
+    from .packed_matmul import (_unpack_block, decode_codes_arith,
+                                packed_block_plan)
+    from repro.quant.schemes import effective_group
+
+    scheme = qw.scheme
+    k, n = qw.shape
+    m = x.shape[0]
+    bm, bn, bk = packed_block_plan(m, k, n, scheme, bm=bm, bn=bn, bk=bk)
+    per = 32 // scheme.weight_bits
+    group = effective_group(scheme.group_size, k)
+    g = min(group, bk)
+    ng = bk // g
+    out = jnp.zeros((m, n), jnp.float32)
+    for i in range(m // bm):
+        for j in range(n // bn):
+            acc = jnp.zeros((bm, bn), jnp.float32)
+            for l in range(k // bk):
+                words = qw.packed[l * bk // per:(l + 1) * bk // per,
+                                  j * bn:(j + 1) * bn]
+                vals = decode_codes_arith(
+                    scheme, _unpack_block(words, scheme.weight_bits))
+                if group > bk:   # per-channel: one global scale row
+                    scales = qw.scales[0:1, j * bn:(j + 1) * bn]
+                else:
+                    scales = qw.scales[l * ng:(l + 1) * ng,
+                                       j * bn:(j + 1) * bn]
+                vals = (vals.reshape(ng, g, bn) * scales[:, None, :]) \
+                    .reshape(bk, bn)
+                xt = x[i * bm:(i + 1) * bm,
+                       l * bk:(l + 1) * bk].astype(jnp.float32)
+                acc = acc + jnp.dot(xt, vals,
+                                    preferred_element_type=jnp.float32)
+            out = out.at[i * bm:(i + 1) * bm, j * bn:(j + 1) * bn].set(acc)
+    return out
+
+
+def _shard_qw(qw: QuantizedLinearWeights, tp: int, j: int, dim: int):
+    """Shard ``j`` of ``tp`` of a packed weight along logical dim (0=K,
+    1=N) — split at the joint code-word/scale-group boundaries that
+    ``partitioning.param_specs`` enforces for K."""
+    k, n = qw.shape
+    if dim == 1:
+        nl = n // tp
+        return QuantizedLinearWeights(
+            qw.scheme, qw.packed[:, j * nl:(j + 1) * nl],
+            qw.scales[:, j * nl:(j + 1) * nl], (k, nl))
+    kp = qw.packed.shape[0] // tp
+    ks = qw.scales.shape[0] // tp
+    kl = k // tp
+    return QuantizedLinearWeights(
+        qw.scheme, qw.packed[j * kp:(j + 1) * kp],
+        qw.scales[j * ks:(j + 1) * ks], (kl, n))
+
+
+def sharded_packed_matmul_ref(x, qw: QuantizedLinearWeights, *, tp: int,
+                              shard_dim: int, bm: int = 128, bn: int = 128,
+                              bk: int = 512):
+    """Oracle for the shard_map'd weight-path kernel (kernels/ops.py).
+
+    Decomposes exactly as the mesh dispatch does — N sharded over 'model'
+    (concatenate local results), or K sharded at joint word/scale-group
+    boundaries (f32 partials + psum) — and runs the bit-exact tiled oracle
+    per shard.  The N-sharded path is bitwise identical to the meshless
+    kernel (the K loop is untouched); the K-sharded path matches the
+    shard_map'd kernel's psum association (left-to-right over shards).
+    """
+    parts = [packed_matmul_tiled_ref(
+        x if shard_dim == 1 else x[:, (x.shape[1] // tp) * j:
+                                   (x.shape[1] // tp) * (j + 1)],
+        _shard_qw(qw, tp, j, shard_dim), bm=bm, bn=bn, bk=bk)
+        for j in range(tp)]
+    if shard_dim == 1:
+        return jnp.concatenate(parts, axis=1)
+    out = parts[0]
+    for p in parts[1:]:
+        out = out + p
+    return out
+
+
 def w8a8_matmul_ref(x_codes, x_scale, w_codes, w_scales):
     """INT8 x INT8 -> INT32 accumulate -> scale epilogue (SmoothQuant MAC).
 
@@ -99,3 +190,42 @@ def decode_attention_ref(q, k_cache, v_cache, kv_valid_len, *, bk=None):
         rows.append(jnp.stack(heads))                     # [hk, rep, dh]
     out = jnp.stack(rows)                                 # [b, hk, rep, dh]
     return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+def sharded_decode_attention_ref(q, k_cache, v_cache, kv_valid_len, *,
+                                 dp: int = 1, tp: int = 1, bk=None):
+    """Oracle for ``sharded_gqa_decode_attention``: decompose the slot and
+    KV-head axes exactly as the shard_map specs do (same divisibility
+    guards), run ``decode_attention_ref`` per (slot-band, head-band) shard,
+    reassemble.  The sharded kernel has no cross-shard collective, so this
+    equals the meshless oracle bitwise — computing it shard-by-shard pins
+    the decomposition itself, not just the math."""
+    from repro.quant.kv_cache import QuantizedKV
+
+    b, _, h, dh = q.shape
+    quant = isinstance(k_cache, QuantizedKV)
+    hk = (k_cache.packed if quant else k_cache).shape[2]
+    rep = h // hk
+    nb = dp if (dp > 1 and b % dp == 0 and b >= dp) else 1
+    nh = tp if (tp > 1 and hk % tp == 0 and hk >= tp) else 1
+    bb, hh = b // nb, hk // nh
+    lens = jnp.asarray(kv_valid_len, jnp.int32)
+
+    def slab(c, bs, hs):
+        if quant:
+            return QuantizedKV(c.packed[bs][:, :, hs], c.scales[bs][:, :, hs],
+                               c.scheme_name)
+        return c[bs][:, :, hs]
+
+    rows = []
+    for i in range(nb):
+        bs = slice(i * bb, (i + 1) * bb)
+        cols = []
+        for j in range(nh):
+            hs = slice(j * hh, (j + 1) * hh)
+            qs = slice(j * hh * rep, (j + 1) * hh * rep)
+            cols.append(decode_attention_ref(
+                q[bs][:, :, qs], slab(k_cache, bs, hs), slab(v_cache, bs, hs),
+                lens[bs], bk=bk))
+        rows.append(jnp.concatenate(cols, axis=2))
+    return jnp.concatenate(rows, axis=0)

@@ -36,7 +36,8 @@ def _declare_on_trace(fn, mesh: Mesh):
 
     @functools.wraps(fn)
     def wrapped(*args):
-        declare_execution(partitioned=partitioned)
+        declare_execution(mesh=mesh if partitioned else None,
+                          partitioned=partitioned)
         return fn(*args)
     return wrapped
 

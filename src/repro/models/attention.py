@@ -245,13 +245,15 @@ def gqa_forward(params, cfg: AttnConfig, x, *, positions=None,
         k_cache, v_cache = new_cache
         valid = jnp.broadcast_to(
             jnp.asarray(cache_index + s, jnp.int32), (b,))
-        from repro.kernels.ops import active_kernel
-        if s == 1 and cfg.causal and active_kernel():
-            # fused flash-decode: streams (packed) KV blocks straight from
-            # the pool slab, dequantizes in-kernel, no [B,S,H,D] copy
-            from repro.kernels.decode_attention import gqa_decode_attention
-            out = gqa_decode_attention(q, k_cache, v_cache, valid)
-        else:
+        out = None
+        if s == 1 and cfg.causal:
+            # fused flash-decode when the execution policy selects it:
+            # streams (packed) KV blocks straight from the pool slab,
+            # dequantizes in-kernel, no [B,S,H,D] copy — shard_map'd over
+            # a declared mesh (slots on 'data', KV heads on 'model')
+            from repro.kernels.ops import fused_decode_attention
+            out = fused_decode_attention(q, k_cache, v_cache, valid)
+        if out is None:
             out = attend(q, cache_read(k_cache), cache_read(v_cache),
                          causal=cfg.causal, q_offset=cache_index,
                          kv_chunk=cfg.kv_chunk, kv_valid_len=valid)

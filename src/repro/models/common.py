@@ -30,23 +30,32 @@ from repro.quant.schemes import (
 
 @jax.tree_util.register_pytree_node_class
 class QLinear:
-    """Quantized linear weights as a pytree node (packed codes + scales)."""
+    """Quantized linear weights as a pytree node (packed codes + scales).
 
-    def __init__(self, packed, scales, scheme_name: str, shape: Tuple[int, int]):
+    ``name`` is the leaf's logical name from the Maker walk ("attn.wq",
+    "ffn.w_down", ...) — static aux, set identically by every Maker (so
+    parameter and spec trees keep matching structures).  It is how the
+    mesh kernel dispatch (kernels/ops.py) finds the leaf's sharding spec
+    in ``partitioning.serve_weight_kernel_specs`` at apply time."""
+
+    def __init__(self, packed, scales, scheme_name: str,
+                 shape: Tuple[int, int], name: Optional[str] = None):
         self.packed = packed
         self.scales = scales
         self.scheme_name = scheme_name
         self.shape = tuple(shape)
+        self.name = name
 
     def tree_flatten(self):
-        return (self.packed, self.scales), (self.scheme_name, self.shape)
+        return (self.packed, self.scales), (self.scheme_name, self.shape,
+                                            self.name)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], aux[0], aux[1])
+        return cls(children[0], children[1], *aux)
 
     def __repr__(self):
-        return f"QLinear({self.scheme_name}, {self.shape})"
+        return f"QLinear({self.scheme_name}, {self.shape}, {self.name})"
 
 
 def set_use_kernel(flag: bool) -> None:
@@ -112,10 +121,12 @@ def apply_linear(leaf, x, out_dtype=jnp.bfloat16):
     """
     if isinstance(leaf, QLinear):
         qw = QuantizedLinearWeights(
-            get_scheme(leaf.scheme_name), leaf.packed, leaf.scales, leaf.shape
+            get_scheme(leaf.scheme_name), leaf.packed, leaf.scales,
+            leaf.shape, name=leaf.name
         )
         # use_kernel=None: dispatch on the active execution policy
-        # (kernels.ops.declare_execution), mesh downgrade folded in
+        # (kernels.ops.declare_execution) — shard_map'd under a declared
+        # mesh, falling back per site
         return quantized_matmul(x, qw, out_dtype=out_dtype)
     return jnp.dot(x.astype(leaf.dtype), leaf).astype(out_dtype)
 
@@ -203,7 +214,7 @@ class QuantMaker(InitMaker):
         else:
             q = quantize_weights(get_scheme(scheme), w)
             packed, scales = q.packed, q.scales
-        return QLinear(packed, scales, scheme, (k, n))
+        return QLinear(packed, scales, scheme, (k, n), name)
 
 
 class AbstractMaker(Maker):
@@ -225,7 +236,7 @@ class AbstractMaker(Maker):
         else:  # w8a8 raw int8
             packed = jax.ShapeDtypeStruct(stack + (k, n), jnp.int8)
         scales = jax.ShapeDtypeStruct(stack + (k // group, n), jnp.float32)
-        return QLinear(packed, scales, scheme, (k, n))
+        return QLinear(packed, scales, scheme, (k, n), name)
 
     def table(self, name, stack, rows, cols, scale=0.02):
         return jax.ShapeDtypeStruct(stack + (rows, cols), self.dtype)
@@ -258,7 +269,7 @@ class PspecMaker(Maker):
         # divisibility is checked against the actual array dims
         spec_p = self._spec(name + "@packed", stack, 2)
         spec_s = self._spec(name + "@scales", stack, 2)
-        return QLinear(spec_p, spec_s, scheme, (k, n))
+        return QLinear(spec_p, spec_s, scheme, (k, n), name)
 
     def table(self, name, stack, rows, cols, scale=0.02):
         return self._spec(name, stack, 2)

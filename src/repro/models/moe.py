@@ -97,7 +97,8 @@ def _expert_ffn(params, cfg: MoEConfig, buf):
         if isinstance(leaf, QLinear):
             per_expert = jax.vmap(
                 lambda p, s, xe: apply_linear(
-                    QLinear(p, s, leaf.scheme_name, leaf.shape), xe, out_dtype)
+                    QLinear(p, s, leaf.scheme_name, leaf.shape, leaf.name),
+                    xe, out_dtype)
             )
             return per_expert(leaf.packed, leaf.scales, x)
         return jnp.einsum("ecd,edf->ecf", x.astype(leaf.dtype), leaf).astype(out_dtype)

@@ -237,12 +237,9 @@ class PrecisionPolicy:
 
         validate_kv_tier(self.kv, cfg)
 
-        if mesh is not None and mesh.size > 1 and self.kernel == "pallas":
-            raise ValueError(
-                "policy kernel='pallas' under a multi-device mesh: the "
-                "Pallas kernels are not GSPMD-partitionable (DESIGN.md "
-                "§10) — use kernel='auto' (downgrades to the jnp path) "
-                "or 'jnp'")
+        # kernel='pallas' is valid under a multi-device mesh: the kernels
+        # run shard_map'd over it (DESIGN.md §14), with per-site fallback
+        # where shard-local shapes cannot tile — no eager rejection.
         return self
 
 

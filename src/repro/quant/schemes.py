@@ -69,6 +69,9 @@ class QuantizedLinearWeights:
     packed: np.ndarray | jnp.ndarray     # int32 [K/per_word, N] (or bf16 [K,N])
     scales: Optional[np.ndarray | jnp.ndarray]  # f32 [K/G, N] or [1, N] or None
     shape: Tuple[int, int]               # (K, N) logical
+    # logical leaf name ("ffn.w_up", ...) when applied from a model tree —
+    # the mesh kernel dispatch keys its sharding-spec lookup on it
+    name: Optional[str] = None
 
 
 # ---------------------------------------------------------------------------

@@ -274,6 +274,55 @@ def param_specs(cfg: ModelConfig, mesh: Mesh, *, train: bool,
     return build_params(cfg, Maker())
 
 
+def serve_weight_kernel_specs(cfg: ModelConfig, mesh: Mesh, *,
+                              plan: Optional[Dict[str, str]] = None,
+                              policy=None) -> Dict[str, Dict]:
+    """Per-leaf mesh axes for the shard_map'd weight kernels (DESIGN.md
+    §14): ``{leaf name: {'packed': (k_ax, n_ax), 'scales': (k_ax, n_ax)}}``
+    for every quantized leaf the kernel path can serve.
+
+    The axes are exactly the leaf's ``param_specs`` storage axes with the
+    leading stack dims stripped — the kernel runs on the per-layer slice
+    inside the scan, and its shard_map in_specs must match where the codes
+    and scales already live (no resharding on the hot path).  The same
+    make_param_rule produces both, so kernel specs and storage specs
+    cannot drift — in particular K only shards where code words and scale
+    groups split in lockstep (the joint-boundary rule).
+
+    Stacked-expert (``moe.*``) leaves are excluded: the expert vmap wraps
+    the kernel call and shard_map cannot nest inside it — those sites fall
+    back to the jnp path per-site (kernels/ops.py warns once per site).
+    """
+    if policy is not None:
+        if plan is not None:
+            raise ValueError("give either plan= or policy=, not both")
+        plan = policy.resolved_plan(cfg)
+    rules = rules_from_mesh(mesh, train=False)
+    sizes = _collect_dim_sizes(cfg, plan)
+    rule = make_param_rule(cfg, rules, sizes)
+    specs: Dict[str, Dict] = {}
+
+    class Probe(PspecMaker):
+        def __init__(self):
+            super().__init__(rule=rule, quantize=True)
+
+        def dense(self, name, stack, k, n, scheme=None):
+            if plan:
+                scheme = plan.get(name, scheme)
+            if scheme is not None and scheme != "bf16" \
+                    and not name.startswith("moe."):
+                specs[name] = {
+                    "packed": (rule(name + "@packed", 0),
+                               rule(name + "@packed", 1)),
+                    "scales": (rule(name + "@scales", 0),
+                               rule(name + "@scales", 1)),
+                }
+            return super().dense(name, stack, k, n, scheme)
+
+    build_params(cfg, Probe())
+    return specs
+
+
 # ---------------------------------------------------------------------------
 # Input / cache / state specs
 # ---------------------------------------------------------------------------

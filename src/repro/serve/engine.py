@@ -164,22 +164,28 @@ class ServingEngine:
         # the engine's effective precision contract: serve-config policy
         # with any legacy plan folded in, validated EAGERLY against the
         # model config and mesh (unknown schemes, group/K mismatches,
-        # quantized-KV-on-MLA, pallas-under-mesh all raise here — not at
-        # first pool build or first trace)
+        # quantized-KV-on-MLA all raise here — not at first pool build or
+        # first trace)
         self.policy = serve_cfg.policy.with_plan(plan or {}) \
             .validate_for(cfg, self.mesh)
         self._plan = self.policy.resolved_plan(cfg)
         self._param_shardings = None
         self._sharded_steps: Dict = {}   # (n_slots, capacity, tier) -> jits
 
-        # Pallas kernels are not GSPMD-partitionable (kernels/ops.py): the
-        # execution policy is declared before every step call (not just
+        # The execution policy (kernel mode + mesh + per-leaf kernel
+        # sharding specs) is declared before every step call (not just
         # here) so lazily-traced jits always see THIS engine's kernel mode
         # and mesh, regardless of what other engines were constructed in
-        # between
+        # between.  Under a multi-device mesh the Pallas kernels run
+        # shard_map'd over it (DESIGN.md §14) — the weight-spec map tells
+        # the dispatch where each packed leaf's codes and scales live.
         self._partitioned = self.mesh is not None and self.mesh.size > 1
+        self._kernel_weight_specs = None
         if self.mesh is not None:
             from repro.runtime import partitioning as PT
+            if self._partitioned and _has_qlinear(params):
+                self._kernel_weight_specs = PT.serve_weight_kernel_specs(
+                    cfg, self.mesh, plan=self._plan)
             self._declare_execution()
             pspec = PT.param_specs(cfg, self.mesh, train=False,
                                    quantize=_has_qlinear(params),
@@ -315,16 +321,20 @@ class ServingEngine:
     # Mesh-aware step construction (DESIGN.md §10)
     # ------------------------------------------------------------------
     def _declare_execution(self) -> None:
-        """Declare this engine's execution policy (kernel mode + mesh) to
-        ``kernels.ops``.  Called before every step invocation: jits trace
-        on their first call, and the kernel-vs-jnp decision is baked in at
-        trace time.  ``kernel='auto'`` leaves the process kernel mode
-        untouched (backend default / whatever a driver pinned); 'jnp' and
-        'pallas' pin it — with the mesh downgrade folded into dispatch."""
+        """Declare this engine's execution policy (kernel mode + mesh +
+        per-leaf kernel sharding specs) to ``kernels.ops``.  Called before
+        every step invocation: jits trace on their first call, and the
+        kernel dispatch is baked in at trace time.  ``kernel='auto'``
+        leaves the process kernel mode untouched (backend default /
+        whatever a driver pinned — under a mesh the default resolves to
+        the shard_map'd pallas path); 'jnp' and 'pallas' pin it.  A
+        single-device mesh declares as meshless (plain kernels; the
+        shardings are trivial)."""
         from repro.kernels.ops import declare_execution
         declare_execution(
             kernel=None if self.policy.kernel == "auto" else self.policy.kernel,
-            partitioned=self._partitioned)
+            mesh=self.mesh if self._partitioned else None,
+            weight_specs=self._kernel_weight_specs)
 
     @property
     def topology(self) -> Optional[Dict[str, int]]:

@@ -11,10 +11,13 @@ import pytest
 from repro.core.packing import PAPER_PARALLELISM, solve_lane_plan
 from repro.kernels import ref
 from repro.kernels.ops import quantized_matmul
-from repro.kernels.packed_matmul import packed_matmul, w8a8_matmul
+from repro.kernels.packed_matmul import (
+    packed_block_plan, packed_gemv, packed_matmul, packed_shapes_legal,
+    w8a8_matmul,
+)
 from repro.kernels.xtramac_mac import virtual_dsp_multiply
 from repro.quant.schemes import (
-    get_scheme, quantize_activations_int8, quantize_weights,
+    effective_group, get_scheme, quantize_activations_int8, quantize_weights,
 )
 
 RNG = np.random.default_rng(7)
@@ -93,6 +96,95 @@ def test_quantized_matmul_batched_shape():
     out = quantized_matmul(x, qw, use_kernel=False)
     assert out.shape == (2, 3, 128) and out.dtype == jnp.bfloat16
     assert not np.isnan(np.asarray(out, dtype=np.float32)).any()
+
+
+# ---------------------------------------------------------------------------
+# deterministic differential suite: kernel == tiled oracle BITWISE
+#
+# tests/test_kernel_properties.py carries the hypothesis generalisation of
+# these contracts; this section is the always-on deterministic pin (the
+# container may not ship hypothesis) over irregular shapes: K not a
+# multiple of the default bk, N not a multiple of bn, single-group K.
+# ---------------------------------------------------------------------------
+def _irregular_shapes(scheme_name):
+    """(m, k, n) triples legal for the scheme but hostile to the tiling."""
+    s = get_scheme(scheme_name)
+    per = 32 // s.weight_bits
+    g = s.group_size
+    if g == -1:   # per-channel: only word alignment constrains K
+        ks = [per * 3, per * 37]
+    else:         # group-aligned, plus a single-group K < group
+        ks = [g, g * 3, per * max(1, g // per - 1)]
+    return [(m, k, n) for k in ks for n in (16, 48, 384) for m in (1, 8, 9, 33)]
+
+
+@pytest.mark.parametrize("scheme", ["awq_int4", "mxfp4", "fp8"])
+def test_packed_kernels_bitexact_vs_tiled_ref(scheme):
+    """packed_gemv/packed_matmul == ref.packed_matmul_tiled_ref bitwise on
+    every packed scheme over irregular shapes, and allclose to the plain
+    dequantize-then-dot LUT oracle."""
+    for m, k, n in _irregular_shapes(scheme):
+        assert packed_shapes_legal(m, k, n, get_scheme(scheme)), (m, k, n)
+        _, qw = _qw(scheme, k, n)
+        x = jnp.asarray(RNG.normal(size=(m, k)), jnp.bfloat16)
+        if m <= 8:   # the GEMV dispatch predicate in kernels/ops.py
+            got = packed_gemv(x, qw, interpret=True)
+            want = ref.packed_matmul_tiled_ref(x, qw, bm=m, bn=256, bk=1024)
+        else:
+            got = packed_matmul(x, qw, interpret=True)
+            want = ref.packed_matmul_tiled_ref(x, qw)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"{scheme} m={m} k={k} n={n}")
+        lut = np.asarray(ref.packed_matmul_ref(x, qw))
+        np.testing.assert_allclose(np.asarray(got), lut, rtol=2e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("scheme", ["awq_int4", "mxfp4", "fp8"])
+@pytest.mark.parametrize("bm,bn,bk", [(8, 16, 64), (32, 128, 512),
+                                      (128, 512, 4096)])
+def test_packed_block_plan_bitexact(scheme, bm, bn, bk):
+    """Any requested block shape fits to the same legal plan in kernel and
+    oracle — bitwise equal even when bk must shrink to a group boundary."""
+    s = get_scheme(scheme)
+    k = s.group_size * 3 if s.group_size > 0 else 4 * 60
+    _, qw = _qw(scheme, k, 96)
+    x = jnp.asarray(RNG.normal(size=(16, k)), jnp.bfloat16)
+    got = packed_matmul(x, qw, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.packed_matmul_tiled_ref(x, qw, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    fbm, fbn, fbk = packed_block_plan(16, k, 96, s, bm=bm, bn=bn, bk=bk)
+    g = effective_group(s.group_size, k)
+    assert 16 % fbm == 0 and 96 % fbn == 0 and k % fbk == 0
+    assert fbk % min(g, fbk) == 0
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 4, 8), (20, 400, 312), (7, 52, 8)])
+def test_w8a8_bitexact_irregular(m, k, n):
+    """INT32 accumulation is associative, so the INT8 kernel stays bitwise
+    equal to its oracle even on shapes the tiling has to pad around."""
+    _, qw = _qw("w8a8", k, n)
+    x_codes, x_scale = quantize_activations_int8(
+        jnp.asarray(RNG.normal(size=(m, k)), jnp.float32))
+    got = w8a8_matmul(x_codes, x_scale, qw.packed, qw.scales, interpret=True)
+    want = ref.w8a8_matmul_ref(x_codes, x_scale, qw.packed, qw.scales)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("scheme", ["awq_int4", "mxfp4", "fp8"])
+@pytest.mark.parametrize("tp", [2, 4])
+def test_sharded_oracle_decomposition(scheme, tp):
+    """sharded_packed_matmul_ref degenerates to the tiled oracle at tp=1
+    and its N-sharded decomposition is bitwise equal to the whole."""
+    s = get_scheme(scheme)
+    k = s.group_size * 2 if s.group_size > 0 else 4 * 32
+    _, qw = _qw(scheme, k, 128 * tp)
+    x = jnp.asarray(RNG.normal(size=(2, k)), jnp.bfloat16)
+    whole = np.asarray(ref.packed_matmul_tiled_ref(x, qw))
+    trivial = np.asarray(ref.sharded_packed_matmul_ref(x, qw, tp=1, shard_dim=1))
+    np.testing.assert_array_equal(trivial, whole)
+    nshard = np.asarray(ref.sharded_packed_matmul_ref(x, qw, tp=tp, shard_dim=1))
+    np.testing.assert_array_equal(nshard, whole)
 
 
 # ---------------------------------------------------------------------------

@@ -167,11 +167,14 @@ def test_quantized_kv_on_mla_raises_eagerly():
     assert validate_kv_tier("bf16", cfg) == "bf16"
 
 
-def test_pallas_kernel_rejected_under_multi_device_mesh():
+def test_pallas_kernel_validates_under_multi_device_mesh():
+    """kernel='pallas' is now first-class under a mesh: the kernels run
+    shard_map'd over it (DESIGN.md §14) with per-site jnp fallback, so the
+    old eager GSPMD rejection is gone for every mesh shape."""
     cfg = get_config("granite-8b", smoke=True)
     pol = PrecisionPolicy(kernel="pallas")
-    with pytest.raises(ValueError, match="GSPMD"):
-        pol.validate_for(cfg, _amesh(1, 2))
+    assert pol.validate_for(cfg, _amesh(1, 2)) is pol
+    pol.validate_for(cfg, _amesh(2, 4))
     pol.validate_for(cfg, _amesh(1, 1))      # single device: allowed
     pol.validate_for(cfg)                    # meshless: allowed
 
@@ -380,9 +383,14 @@ def test_legacy_kv_dtype_adapter_bit_identical_dp2_tp4():
     legacy = _generate(build(kv_dtype="int8"), batch)
     pol = _generate(build(policy=PrecisionPolicy(kv="int8")), batch)
     np.testing.assert_array_equal(legacy, pol)
-    # and both match the single-device engine
+    # and both match the single-device engine.  Under the mesh, 'auto'
+    # resolves to the pallas kernels (DESIGN.md §14); meshless it resolves
+    # to jnp, a different numeric path (fused-f32 vs bf16 dequant) — so
+    # the meshless reference pins the SAME resolved mode.  The mesh-vs-
+    # meshless contract per mode is test_kernel_mesh_equivalence_matrix's.
     single = _generate(ServingEngine(cfg, params, ServeConfig(
-        max_len=32, n_slots=8, prefill_chunk=8, kv_dtype="int8")), batch)
+        max_len=32, n_slots=8, prefill_chunk=8,
+        policy=PrecisionPolicy(kv="int8", kernel="pallas"))), batch)
     np.testing.assert_array_equal(legacy, single)
 
 
