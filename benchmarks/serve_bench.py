@@ -32,6 +32,26 @@ produced exactly that way:
     # --weight-kernel on (packed Pallas kernels on the decode weight path)
     # and --weight-kernel off (jnp dequantize-then-dot), so the baseline
     # records the serving metrics of BOTH weight paths
+    # ... and the paged-vs-slab pair (DESIGN.md §15): the shared-prefix
+    # workload at a fixed cache budget, once on the slab pool and once
+    # with --paged:
+    python benchmarks/serve_bench.py --kv-dtype bf16 --requests 12 \
+        --rate 20 --seed 2 --prefix-len 32 --prefix-share 0.75 \
+        --prompt-len 16 --max-new 16 --n-slots 12 --cache-budget-mb 2 \
+        --max-burst 8 --baseline-json benchmarks/BENCH_serve_baseline.json
+    # ... then the same line with --paged.  The paged point reports
+    # prefix hit-rate, hit-vs-miss TTFT, pages in use, and a
+    # peak_in_flight_requests that the slab point cannot reach at the
+    # same budget (worst-case slot reservation vs pages actually used).
+
+Shared-prefix workload knobs (``--prefix-len N --prefix-share F``): a
+fraction F of requests carry ONE common N-token prefix ahead of their
+unique tail; every point (slab or paged) reports
+``peak_in_flight_requests``, and paged points add prefix hit/miss
+counts, hit-vs-miss TTFT split (from ServeMetrics), page-size/arena
+geometry and peak/cached page counts.  Every point also carries an
+``env`` stamp (jax/jaxlib versions, backend, device kind) so committed
+baselines stay attributable across environments.
 
 ``--max-burst`` caps the device-resident decode burst (DESIGN.md §11);
 each point reports ``decode_dispatches_per_token``, ``host_syncs_per_token``
@@ -115,10 +135,12 @@ def build_engine(args, cfg, params, kv_dtype, mesh, policy=None):
     # pure function of the workload shape — NOT of --max-burst — so sweep
     # points at different burst caps measure dispatch amortization against
     # an identical engine configuration
-    scfg = ServeConfig(max_len=args.prompt_len + args.max_new,
+    scfg = ServeConfig(max_len=args.prefix_len + args.prompt_len
+                       + args.max_new,
                        temperature=args.temperature,
                        n_slots=args.n_slots, prefill_chunk=args.chunk,
                        cache_budget_bytes=budget,
+                       paged=args.paged, page_size=args.page_size,
                        max_burst=args.max_burst, mesh=mesh, policy=policy)
     engine = ServingEngine(cfg, params, scfg)
     print(f"== precision policy: {engine.policy.to_json()}")
@@ -126,14 +148,28 @@ def build_engine(args, cfg, params, kv_dtype, mesh, policy=None):
 
 
 def make_workload(args, vocab):
-    """Seeded Poisson arrivals with jittered prompt lengths."""
+    """Seeded Poisson arrivals with jittered prompt lengths.
+
+    With ``--prefix-len N --prefix-share F`` a fraction F of the requests
+    share ONE common N-token prefix ahead of their unique tail (the
+    shared-system-prompt workload); the rest get fully unique prompts of
+    the same total length, so the two cohorts differ only in
+    shareability.  On a paged pool the shared cohort prefix-hits once the
+    first of them has prefilled and registered (DESIGN.md §15); on the
+    slab pool the same workload measures the no-sharing baseline."""
     rng = np.random.default_rng(args.seed)
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
     arrivals[0] = 0.0                      # first request starts the clock
     lens = rng.integers(max(2, args.prompt_len // 2), args.prompt_len + 1,
                         args.requests)
-    prompts = [rng.integers(1, vocab, (int(n),)).astype(np.int32)
-               for n in lens]
+    shared = rng.random(args.requests) < args.prefix_share
+    prefix = rng.integers(1, vocab, (args.prefix_len,)).astype(np.int32)
+    prompts = []
+    for n, s in zip(lens, shared):
+        tail = rng.integers(1, vocab,
+                            (int(n) + (0 if s else args.prefix_len),)
+                            ).astype(np.int32)
+        prompts.append(np.concatenate([prefix, tail]) if s else tail)
     return arrivals, prompts
 
 
@@ -161,12 +197,27 @@ def warmup(engine, prompts, max_new, tiers=None):
             sched.run(max_steps=200)
 
 
-def point_label(cfg, kv_dtype, tiers, max_burst, weight_kernel="auto"):
+def point_label(cfg, kv_dtype, tiers, max_burst, weight_kernel="auto",
+                paged=False):
     label = "+".join(tiers) if tiers else kv_dtype
     stem = f"serve_{cfg.name}_{label.replace('+', '-')}_burst{max_burst}"
     if weight_kernel != "auto":
         stem += f"_wk{weight_kernel}"   # --weight-kernel on|off points
+    if paged:
+        stem += "_paged"                # paged-vs-slab pairs (DESIGN.md §15)
     return stem
+
+
+def bench_env():
+    """Environment stamp carried by every bench point: the perf
+    trajectory in a committed baseline is only attributable if each point
+    records what software/hardware produced it."""
+    import jax
+    import jaxlib
+    dev = jax.devices()[0]
+    return {"jax": jax.__version__, "jaxlib": jaxlib.__version__,
+            "backend": jax.default_backend(),
+            "device_kind": dev.device_kind, "n_devices": jax.device_count()}
 
 
 def run_point(args, cfg, engine, kv_dtype, tiers=None):
@@ -196,7 +247,7 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None):
         os.makedirs(args.trace_dir, exist_ok=True)
         stem = os.path.join(args.trace_dir,
                             point_label(cfg, kv_dtype, tiers, args.max_burst,
-                                        args.weight_kernel))
+                                        args.weight_kernel, args.paged))
         obs.tracer = Tracer()
         obs.registry = MetricsRegistry()
         obs.snapshots = SnapshotWriter(obs.registry, stem + ".metrics.jsonl")
@@ -208,6 +259,8 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None):
               f"{args.chunk}; {args.requests} requests @ ~{args.rate}/s")
     reqs = []
     admitted_after_first_decode = 0
+    peak_in_flight = 0          # concurrent admitted (PREFILL+DECODE) reqs
+    peak_pages = 0              # paged pools: peak arena pages in use
     i = 0
     t0 = time.monotonic()
     while i < args.requests or sched.has_work:
@@ -224,6 +277,11 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None):
             i += 1
         if sched.has_work:
             sched.step()
+            peak_in_flight = max(peak_in_flight, sum(
+                1 for r in reqs if r.slot is not None and not r.is_finished))
+            peak_pages = max(peak_pages, sum(
+                p.pages_in_use for p in sched.pools.values()
+                if getattr(p, "paged", False)))
         elif i < args.requests:
             time.sleep(min(float(arrivals[i]) - now, 0.01))
 
@@ -243,6 +301,27 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None):
     rep["admitted_mid_flight"] = admitted_after_first_decode
     rep["kv_dtype"] = "+".join(tiers) if tiers else kv_dtype
     rep["n_slots"] = sum(p.n_slots for p in sched.pools.values())
+    rep["env"] = bench_env()
+    # in-flight concurrency is THE paged-vs-slab capacity number: at a
+    # fixed cache budget the slab admits worst-case-sized slots, the
+    # paged pool admits on pages actually needed (+ prefix sharing)
+    rep["peak_in_flight_requests"] = peak_in_flight
+    rep["paged"] = bool(args.paged)
+    if args.paged:
+        rep["page_size"] = pool.page_size
+        rep["n_pages"] = sum(p.n_pages for p in sched.pools.values())
+        rep["pages_in_use_peak"] = peak_pages
+        rep["pages_cached_final"] = sum(p.pages_cached
+                                        for p in sched.pools.values())
+        rep["prefix_hits"] = sum(p.n_prefix_hits
+                                 for p in sched.pools.values())
+        rep["prefix_misses"] = sum(p.n_prefix_misses
+                                   for p in sched.pools.values())
+        rep["prefix_hit_tokens"] = sum(p.prefix_hit_tokens_total
+                                       for p in sched.pools.values())
+    if args.prefix_len:
+        rep["prefix_len"] = args.prefix_len
+        rep["prefix_share"] = args.prefix_share
     if not tiers:
         # scalar bytes/token is only meaningful for a single-tier pool;
         # mixed points carry tier_bytes_per_token instead
@@ -321,6 +400,21 @@ def main():
                          "assigned tiers round-robin via Request.kv_policy "
                          "(DESIGN.md §12).  One mixed point instead of a "
                          "per-dtype sweep")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV pool (page-table arena, "
+                         "COW prefix sharing, DESIGN.md §15) instead of "
+                         "the fixed slab — run the same line with and "
+                         "without this flag for a paged-vs-slab pair")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="positions per arena page (0 = prefill chunk)")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="shared-prefix workload: this many tokens of ONE "
+                         "common prefix ahead of each shared request's "
+                         "unique tail (0 disables)")
+    ap.add_argument("--prefix-share", type=float, default=0.0,
+                    help="fraction of requests that carry the shared "
+                         "prefix (the rest get unique prompts of the same "
+                         "total length)")
     ap.add_argument("--weight-kernel", default="auto",
                     choices=["auto", "on", "off"],
                     help="decode-step quantized weight path: 'on' pins the "
@@ -405,7 +499,7 @@ def main():
             path = os.path.join(
                 args.out_dir,
                 point_label(cfg, kv_dtype, tiers, args.max_burst,
-                            args.weight_kernel) + ".json")
+                            args.weight_kernel, args.paged) + ".json")
             with open(path, "w") as f:
                 json.dump(rep, f, indent=2, allow_nan=False)
             print(f"== wrote {path}")

@@ -192,6 +192,32 @@ def decode_attention_ref(q, k_cache, v_cache, kv_valid_len, *, bk=None):
     return out.reshape(b, 1, h, dh).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_arena, v_arena, page_table,
+                               kv_valid_len, *, bk=None):
+    """Paged-attention oracle (DESIGN.md §15): gather each slot's virtual
+    KV slab from the page arena through its page table, then run the
+    UNCHANGED split-KV oracle on the gathered slabs.
+
+    This *is* the paged serving contract in one line: paged attention =
+    page gather + slab attention.  The production path does exactly this
+    inside its jitted steps (``quant.kv_cache.gather_pages`` feeding the
+    einsum path or the Pallas decode kernel), so the kernel is bit-exact
+    against this oracle whenever it is bit-exact against
+    ``decode_attention_ref`` on the gathered slab — garbage pages gathered
+    into positions >= ``kv_valid_len`` are masked to exact zero by the
+    flash update, identically in both.
+
+    ``k_arena`` / ``v_arena``: [n_pages, page_size, hk, dh] (bf16 or
+    ``QuantizedKV``).  ``page_table``: [n_slots, pages_per_slot] int32.
+    """
+    from repro.quant.kv_cache import gather_pages
+
+    table = jnp.asarray(page_table, jnp.int32)
+    return decode_attention_ref(q, gather_pages(k_arena, table),
+                                gather_pages(v_arena, table),
+                                kv_valid_len, bk=bk)
+
+
 def sharded_decode_attention_ref(q, k_cache, v_cache, kv_valid_len, *,
                                  dp: int = 1, tp: int = 1, bk=None):
     """Oracle for ``sharded_gqa_decode_attention``: decompose the slot and

@@ -33,8 +33,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.quant.kv_cache import (cache_read, cache_write_rows,
-                                  cache_write_slice, kv_slab_pspec,
-                                  kv_slab_spec)
+                                  cache_write_slice, gather_pages,
+                                  kv_slab_pspec, kv_slab_spec, scatter_pages)
 from repro.quant.schemes import get_kv_scheme
 
 from .common import (Maker, apply_linear, apply_rope, rms_norm,
@@ -198,7 +198,7 @@ def _attend_chunked(q, k, v, *, causal, q_offset, kv_chunk, kv_valid_len, scale)
 # ---------------------------------------------------------------------------
 def gqa_forward(params, cfg: AttnConfig, x, *, positions=None,
                 cache: Optional[Tuple] = None, cache_index=None,
-                attend_local: bool = False):
+                attend_local: bool = False, page_table=None):
     """x [B, S, D] -> (out [B, S, D], new_cache).
 
     cache = (k_cache [B, Smax, Hk, Dh], v_cache ...) with ``cache_index`` the
@@ -209,9 +209,21 @@ def gqa_forward(params, cfg: AttnConfig, x, *, positions=None,
     x itself.  ``attend_local``: write the cache but attend over the
     freshly-computed k/v (prefill-from-empty: identical math, and keeps the
     chunked scan off the sharded cache sequence axis).
+
+    ``page_table`` (paged serving, DESIGN.md §15): when given, ``cache`` is
+    a page *arena* [n_pages, page_size, Hk, Dh] per slab and ``page_table``
+    [B, pages_per_slot] maps each batch row to its pages.  The arena is
+    gathered into the per-row virtual slab up front, ALL write/attend logic
+    below runs unchanged on that slab (identical bytes, identical shapes —
+    the bit-identity contract with the slab pool), and the updated slab is
+    scattered back through the table on the way out.
     """
     b, s, d = x.shape
     h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    arena = None
+    if cache is not None and page_table is not None:
+        arena = cache
+        cache = tuple(gather_pages(a, page_table) for a in arena)
     q = shard_act(apply_linear(params["wq"], x).reshape(b, s, h, dh), "bthd")
     k = shard_act(apply_linear(params["wk"], x).reshape(b, s, hk, dh), "bthd")
     v = shard_act(apply_linear(params["wv"], x).reshape(b, s, hk, dh), "bthd")
@@ -258,6 +270,9 @@ def gqa_forward(params, cfg: AttnConfig, x, *, positions=None,
                          causal=cfg.causal, q_offset=cache_index,
                          kv_chunk=cfg.kv_chunk, kv_valid_len=valid)
 
+    if arena is not None and new_cache is not None:
+        new_cache = tuple(scatter_pages(a, page_table, v)
+                          for a, v in zip(arena, new_cache))
     out = out.reshape(b, s, h * dh)
     return apply_linear(params["wo"], out), new_cache
 
@@ -349,7 +364,7 @@ def _mla_queries(params, cfg: MLAConfig, x, positions):
 
 
 def mla_forward(params, cfg: MLAConfig, x, *, cache=None, cache_index=None,
-                positions=None, attend_local: bool = False):
+                positions=None, attend_local: bool = False, page_table=None):
     """MLA attention.  cache = (c_kv [B,Smax,kv_lora], k_rope [B,Smax,Dr]).
 
     Prefill/train path expands K/V per position; the decode path (Sq==1)
@@ -357,9 +372,16 @@ def mla_forward(params, cfg: MLAConfig, x, *, cache=None, cache_index=None,
     the compressed latent space (the MLA serving trick), so cached bytes are
     kv_lora + d_head_rope per token regardless of head count.  As in
     ``gqa_forward``, ``cache_index`` may be a [B] vector for per-slot decode.
+    ``page_table`` gathers/scatters the latent + rope arenas exactly as in
+    ``gqa_forward`` — the offsets differ (no head axis) but the pages are
+    the same [page, position, ...] layout (DESIGN.md §15).
     """
     b, s, d = x.shape
     h = cfg.n_heads
+    arena = None
+    if cache is not None and page_table is not None:
+        arena = cache
+        cache = tuple(gather_pages(a, page_table) for a in arena)
     per_row = cache_index is not None and jnp.ndim(cache_index) == 1
     if positions is None:
         base = jnp.asarray(0 if cache_index is None else cache_index)
@@ -397,6 +419,9 @@ def mla_forward(params, cfg: MLAConfig, x, *, cache=None, cache_index=None,
     else:
         out = _mla_expanded(params, cfg, q_nope, q_rope, c_kv, k_rope, valid,
                             q_off, s)
+    if arena is not None and new_cache is not None:
+        new_cache = tuple(scatter_pages(a, page_table, v)
+                          for a, v in zip(arena, new_cache))
     return apply_linear(params["wo"], out.reshape(b, s, h * cfg.d_head_v)), new_cache
 
 

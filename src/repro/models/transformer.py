@@ -206,19 +206,21 @@ def _tf_block_params(mk: Maker, cfg: ModelConfig, stack, *, causal=True,
 
 def _tf_block_apply(cfg: ModelConfig, p, x, *, cache=None, cache_index=None,
                     positions=None, enc=None, causal=True, moe_groups=None,
-                    attend_local=False):
+                    attend_local=False, page_table=None):
     """One transformer block.  Returns (x, new_cache, aux)."""
     h = _apply_norm(cfg, p["ln1"], x)
     if cfg.use_mla:
         attn_out, new_cache = A.mla_forward(p["attn"], cfg.mla_cfg(), h,
                                             cache=cache, cache_index=cache_index,
                                             positions=positions,
-                                            attend_local=attend_local)
+                                            attend_local=attend_local,
+                                            page_table=page_table)
     else:
         attn_out, new_cache = A.gqa_forward(p["attn"], cfg.attn_cfg(causal), h,
                                             cache=cache, cache_index=cache_index,
                                             positions=positions,
-                                            attend_local=attend_local)
+                                            attend_local=attend_local,
+                                            page_table=page_table)
     x = x + attn_out
     if enc is not None and "xattn" in p:
         hx = _apply_norm(cfg, p["ln_x"], x)
@@ -316,7 +318,8 @@ def _scan_stack(cfg, mode, body, x0, layer_params, cache):
 
 
 def forward(cfg: ModelConfig, params, batch: Dict[str, Any], *,
-            cache: Optional[Dict] = None, cache_index=None, mode: str = "train"):
+            cache: Optional[Dict] = None, cache_index=None, mode: str = "train",
+            page_table=None):
     """Unified forward.  mode: train | prefill | prefill_chunk | decode.
 
     batch: tokens [B, S]; vlm adds patches [B, Np, D]; audio adds frames
@@ -329,8 +332,16 @@ def forward(cfg: ModelConfig, params, batch: Dict[str, Any], *,
     caller can read the true last-token logits out of a padded final chunk.
     ``decode`` additionally accepts a per-row [B] ``cache_index`` (each KV
     slot at its own length — the serving scheduler's batch).
+
+    ``page_table`` [B, pages_per_slot] (paged serving, DESIGN.md §15):
+    ``cache`` leaves are page arenas [L, n_pages, page_size, ...] and each
+    layer's slab is gathered/scattered through the table inside the block
+    (the table is a loop-invariant capture of the layer scan — pool
+    families only).
     """
     assert mode in ("train", "prefill", "prefill_chunk", "decode"), mode
+    assert page_table is None or cfg.family in ("dense", "moe", "vlm"), \
+        "page_table is a slot-pool-family path (dense/moe/vlm)"
     tokens = batch["tokens"]
     x = _embed(cfg, params, tokens)
     positions = None
@@ -363,7 +374,8 @@ def forward(cfg: ModelConfig, params, batch: Dict[str, Any], *,
             h, new_c, a = _tf_block_apply(cfg, lp, h, cache=lcache,
                                           cache_index=cache_index,
                                           moe_groups=moe_groups,
-                                          attend_local=attend_local)
+                                          attend_local=attend_local,
+                                          page_table=page_table)
             return (h, aux + a), new_c
         x, aux, new_cache = _scan_stack(cfg, mode, body, x, params["layers"],
                                         cache)

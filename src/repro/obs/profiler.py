@@ -53,17 +53,28 @@ class StepProfiler:
     projection scheme, falling back to 'w8a8' when the config's scheme
     has no deployment row (e.g. pure-bf16 configs) — the fallback is
     recorded in the report so ratios are never silently re-based.
+
+    ``engine_model`` is the per-datatype MAC pricing source: by default
+    (``"auto"``) the channel-streaming GEMV engine for the scheme
+    (``perfmodel.gemv_engine_for`` — N_MAC lanes scale with the scheme's
+    weight bits, paper §VI-C), so model-vs-measured ratios reflect what a
+    4-bit vs 8-bit vs bf16 MAC actually costs the fabric instead of a
+    flat MAC count at a fixed rate.  Pass an explicit
+    ``GemvEngineConfig`` to pin the engine, or None for the legacy
+    fabric-budget pricing.
     """
 
     def __init__(self, cfg, *, design: str = "xtramac",
-                 scheme: Optional[str] = None,
+                 scheme: Optional[str] = None, engine_model="auto",
                  clock: Callable[[], float] = time.perf_counter):
-        from repro.perfmodel.analytical import _DEPLOY
+        from repro.perfmodel.analytical import _DEPLOY, gemv_engine_for
         self.cfg = cfg
         self.design = design
         want = scheme or cfg.scheme_proj or "w8a8"
         self.scheme = want if want in _DEPLOY else "w8a8"
         self.scheme_fallback = self.scheme != want
+        self.engine_model = gemv_engine_for(self.scheme) \
+            if engine_model == "auto" else engine_model
         self.clock = clock
         self._decode: List[_DecodeRec] = []
         self._prefill: List[_PrefillRec] = []
@@ -96,7 +107,8 @@ class StepProfiler:
             t = decode_latency(
                 self.cfg, self.scheme, batch=max(rows, 1),
                 context=max(context, 1), design=self.design,
-                kv_bytes_per_token=kv_bytes_per_token)["t_total_s"]
+                kv_bytes_per_token=kv_bytes_per_token,
+                engine_model=self.engine_model)["t_total_s"]
             self._model_memo[key] = t
         return t
 
@@ -157,8 +169,13 @@ class StepProfiler:
                 round(t["model_s"] / t["measured_s"], 6)
                 if t["measured_s"] > 0 else None)
 
+        eng = self.engine_model
         return {"design": self.design, "scheme": self.scheme,
                 "scheme_fallback": self.scheme_fallback,
+                "mac_pricing": None if eng is None else {
+                    "weight_bits": eng.weight_bits,
+                    "lanes_quant": eng.macs_per_cycle,
+                    "hbm_utilization": eng.hbm_utilization},
                 "groups": rows,
                 "per_tier": {k: per_tier[k] for k in sorted(per_tier)}}
 
@@ -188,18 +205,26 @@ def compiled_step_cost(engine, pool, k: int = 1) -> Dict:
     cache = jax.tree_util.tree_map(
         lambda a: spec(a.shape, a.dtype), pool.cache)
     row_i32 = spec((n,), jnp.int32)
+    paged = getattr(pool, "paged", False)
+    table = (spec(pool.page_table.shape, jnp.int32),) if paged else ()
     if k <= 1:
-        lowered = jax.jit(engine._decode_slots_fn).lower(
+        fn = engine._decode_slots_paged_fn if paged \
+            else engine._decode_slots_fn
+        lowered = jax.jit(fn).lower(
             engine.params, spec((n, 1), jnp.int32), cache, row_i32,
-            spec((n, 2), jnp.uint32), spec((n,), f32))
+            spec((n, 2), jnp.uint32), spec((n,), f32), *table)
     else:
-        lowered = jax.jit(engine._decode_burst_fn).lower(
+        fn = engine._decode_burst_paged_fn if paged \
+            else engine._decode_burst_fn
+        lowered = jax.jit(fn).lower(
             engine.params, cache, row_i32, row_i32, spec((n,), jnp.bool_),
             row_i32, spec((k, n, 2), jnp.uint32), spec((n,), f32), row_i32,
-            jnp.int32(pool.max_len))
+            jnp.int32(pool.max_len), *table)
     cost = analyze(lowered.compile().as_text())
     steps = k * n
     return {"k": k, "n_slots": n, "kv_dtype": pool.kv_dtype,
+            "paged": paged,
+            **({"n_pages": pool.n_pages} if paged else {}),
             "flops": cost.flops, "hbm_bytes": cost.hbm_bytes,
             "collective_bytes": cost.collective_bytes,
             "flops_per_token_step": round(cost.flops / steps, 1),

@@ -1,7 +1,7 @@
 from .hardware import FPGAProfile, GPUProfile, TPUProfile, U55C, V80, H100, TPU_V5E
-from .analytical import (decode_latency, fig14_simulation, mac_distribution,
-                         mac_unit_budget)
+from .analytical import (decode_latency, fig14_simulation, gemv_engine_for,
+                         mac_distribution, mac_unit_budget)
 
 __all__ = ["FPGAProfile", "GPUProfile", "TPUProfile", "U55C", "V80", "H100",
-           "TPU_V5E", "decode_latency", "fig14_simulation",
+           "TPU_V5E", "decode_latency", "fig14_simulation", "gemv_engine_for",
            "mac_distribution", "mac_unit_budget"]

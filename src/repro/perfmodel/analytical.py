@@ -22,8 +22,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
+from repro.core.gemv_engine import GemvEngineConfig
 from repro.core.resource_model import Resources, TABLE_IV, TABLE_V
 from repro.models.transformer import ModelConfig
 from .hardware import FPGAProfile, V80
@@ -59,6 +60,21 @@ _DEPLOY = {
 
 _SCHEME_WEIGHT_BITS = {"awq_int4": 4, "mxfp4": 4, "fp8": 8, "w8a8": 8,
                        "bf16": 16}
+
+
+def gemv_engine_for(scheme: str, fpga: FPGAProfile = V80) -> GemvEngineConfig:
+    """Datatype-adaptive MAC engine for ``scheme`` on ``fpga``: the
+    channel-streaming GEMV model of ``core/gemv_engine.py`` (paper §VI-C)
+    with the lane count set by the scheme's weight precision —
+    ``N_MAC = channel_bits / (w_bits * P)`` — and the profile's HBM
+    bandwidth and power.  A 4-bit scheme packs 4x the MAC lanes of bf16
+    into the same channels, so pricing through this engine makes compute
+    cost *per-datatype* rather than a flat MAC count at a fixed rate.
+    The channel geometry (30 active 512-bit channels) is the paper's
+    U55c layout; only bandwidth/power scale with the profile."""
+    return GemvEngineConfig(
+        hbm_bw_gbps=fpga.hbm_gbps, power_w=fpga.power_w,
+        weight_bits=min(_SCHEME_WEIGHT_BITS[scheme], 16))
 
 
 @functools.lru_cache(maxsize=64)
@@ -103,7 +119,9 @@ def mac_unit_budget(per_op: Resources, fpga: FPGAProfile) -> int:
 
 def decode_latency(cfg: ModelConfig, scheme: str, *, batch: int, context: int,
                    design: str, fpga: FPGAProfile = V80,
-                   kv_bytes_per_token: float = None) -> Dict[str, float]:
+                   kv_bytes_per_token: float = None,
+                   engine_model: Optional[GemvEngineConfig] = None
+                   ) -> Dict[str, float]:
     """One decode step latency under the two-phase streaming model.
 
     ``kv_bytes_per_token`` overrides the default bf16 KV storage cost
@@ -111,6 +129,16 @@ def decode_latency(cfg: ModelConfig, scheme: str, *, batch: int, context: int,
     tiers (DESIGN.md §9) stream fewer bytes per context position, which
     is how the serving profiler (obs/profiler.py) prices a pool tier
     into the prediction.
+
+    ``engine_model`` routes the compute phase through the channel-
+    streaming GEMV engine (``gemv_engine_for``) instead of the fabric
+    unit-budget tables: the quantized projections run at the engine's
+    lane count for the scheme's weight bits, attention at the (4x
+    sparser) bf16 lane count, and the memory phase is derated by the
+    engine's measured HBM utilization.  This is the per-datatype MAC
+    pricing the serving profiler joins against measurements; the Fig. 14
+    vendor-vs-XtraMAC comparison keeps the table-budget path
+    (``engine_model=None``) so its density deltas stay isolated.
     """
     split = _param_split(cfg)
     w_bits = _SCHEME_WEIGHT_BITS[scheme]
@@ -120,20 +148,32 @@ def decode_latency(cfg: ModelConfig, scheme: str, *, batch: int, context: int,
         kv_bytes_per_token = \
             2.0 * 2 * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers
     kv_bytes = context * float(kv_bytes_per_token)
-    t_mem = (weight_bytes + batch * kv_bytes) / (fpga.hbm_gbps * 1e9)
+    bw = fpga.hbm_gbps * 1e9
+    if engine_model is not None:
+        bw *= engine_model.hbm_utilization
+    t_mem = (weight_bytes + batch * kv_bytes) / bw
 
-    vendor_slot, (vq, vb), xtra_inst, (xq, xb) = _DEPLOY[scheme]
-    if design == "vendor":
-        slots = mac_unit_budget(vendor_slot, fpga)
-        units_q, units_b = slots * vq, slots * vb
-    else:
-        slots = mac_unit_budget(xtra_inst, fpga)
-        units_q, units_b = slots * xq, slots * xb
     proj_macs = split["proj"] + cfg.vocab * cfg.d_model
     attn_macs = 2.0 * context * cfg.n_heads * cfg.head_dim * cfg.n_layers
-    freq = fpga.freq_mhz * 1e6
-    t_compute = batch * (proj_macs / (units_q * freq)
-                         + attn_macs / (units_b * freq))
+    if engine_model is not None:
+        eng_q = dataclasses.replace(engine_model,
+                                    weight_bits=min(w_bits, 16))
+        eng_b = dataclasses.replace(engine_model, weight_bits=16)
+        units_q, units_b = eng_q.macs_per_cycle, eng_b.macs_per_cycle
+        t_compute = batch * (
+            proj_macs / (units_q * eng_q.freq_hz)
+            + attn_macs / (units_b * eng_b.freq_hz))
+    else:
+        vendor_slot, (vq, vb), xtra_inst, (xq, xb) = _DEPLOY[scheme]
+        if design == "vendor":
+            slots = mac_unit_budget(vendor_slot, fpga)
+            units_q, units_b = slots * vq, slots * vb
+        else:
+            slots = mac_unit_budget(xtra_inst, fpga)
+            units_q, units_b = slots * xq, slots * xb
+        freq = fpga.freq_mhz * 1e6
+        t_compute = batch * (proj_macs / (units_q * freq)
+                             + attn_macs / (units_b * freq))
     return {"t_mem_s": t_mem, "t_compute_s": t_compute,
             "t_total_s": max(t_mem, t_compute),
             "bound": "memory" if t_mem >= t_compute else "compute",

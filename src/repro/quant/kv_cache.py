@@ -134,3 +134,57 @@ def cache_read(slab, dtype=jnp.bfloat16):
         return kv_dequantize(get_kv_scheme(slab.scheme_name),
                              slab.packed, slab.scales, dtype)
     return slab
+
+
+# ---------------------------------------------------------------------------
+# Paged indirection (serve/kv_pool.PagedKVPool; DESIGN.md §15)
+# ---------------------------------------------------------------------------
+def gather_pages(arena, table):
+    """Materialize the virtual KV slab of every slot from a page arena.
+
+    ``arena``: one layer's page arena [n_pages, page_size, ...] (bare array
+    or ``QuantizedKV`` — codes and scales gather in lockstep).  ``table``:
+    [n_slots, pages_per_slot] int32 page ids.  Returns the *virtual slab*
+    [n_slots, pages_per_slot * page_size, ...] — exactly the layout the
+    slab pool stores directly, so every downstream consumer (the einsum
+    attention paths, the Pallas decode kernel, the write primitives above)
+    runs UNCHANGED on identical bytes.  That is the paged pool's
+    bit-identity argument: same committed bytes in the same [slot, pos]
+    layout, garbage pages only ever gathered into positions masked by
+    ``kv_valid_len``.
+    """
+    n_slots, pp = table.shape
+
+    def g(a):
+        v = a[table]                         # [n_slots, pp, page_size, ...]
+        return v.reshape((n_slots, pp * a.shape[1]) + a.shape[2:])
+
+    if isinstance(arena, QuantizedKV):
+        return QuantizedKV(g(arena.packed), g(arena.scales),
+                           arena.scheme_name)
+    return g(arena)
+
+
+def scatter_pages(arena, table, virt):
+    """Write a (possibly updated) virtual slab back through the page table.
+
+    Inverse of ``gather_pages``: virtual position [slot, i*ps + j] lands at
+    ``arena[table[slot, i], j]``.  Duplicate table entries are allowed and
+    safe by the pool's invariants (DESIGN.md §15): a page shared
+    copy-on-write between slots is never written through (writes hit
+    private pages only, so every duplicate scatters the page's own
+    unchanged bytes), and the reserved garbage page 0 — the target of every
+    unmapped entry — may receive differing garbage rows, but its content is
+    never gathered into an attended (< ``kv_valid_len``) position.
+    """
+    n_slots, pp = table.shape
+    flat = table.reshape(-1)
+
+    def s(a, v):
+        return a.at[flat].set(
+            v.reshape((n_slots * pp, a.shape[1]) + a.shape[2:]))
+
+    if isinstance(arena, QuantizedKV):
+        return QuantizedKV(s(arena.packed, virt.packed),
+                           s(arena.scales, virt.scales), arena.scheme_name)
+    return s(arena, virt)

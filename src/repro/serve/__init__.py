@@ -1,13 +1,17 @@
 from repro.quant.policy import PrecisionPolicy
 
 from .engine import SCHEDULABLE_FAMILIES, ServeConfig, ServingEngine
-from .kv_pool import KVCachePool, bytes_per_slot, slots_for_budget
+from .kv_pool import (KVCachePool, PageAllocator, PagedKVPool,
+                      bytes_per_page, bytes_per_slot, pages_for_budget,
+                      slots_for_budget)
 from .metrics import ServeMetrics
 from .request import Request, RequestState, SamplingParams
 from .scheduler import Scheduler
 
 __all__ = [
-    "KVCachePool", "PrecisionPolicy", "Request", "RequestState",
-    "SamplingParams", "SCHEDULABLE_FAMILIES", "Scheduler", "ServeConfig",
-    "ServeMetrics", "ServingEngine", "bytes_per_slot", "slots_for_budget",
+    "KVCachePool", "PageAllocator", "PagedKVPool", "PrecisionPolicy",
+    "Request", "RequestState", "SamplingParams", "SCHEDULABLE_FAMILIES",
+    "Scheduler", "ServeConfig", "ServeMetrics", "ServingEngine",
+    "bytes_per_page", "bytes_per_slot", "pages_for_budget",
+    "slots_for_budget",
 ]

@@ -80,7 +80,8 @@ from repro.models import transformer as T
 from repro.models.common import QLinear
 from repro.quant.policy import PrecisionPolicy, validate_kv_tier
 
-from .kv_pool import KVCachePool, POOLABLE_FAMILIES, slots_for_budget
+from .kv_pool import (KVCachePool, PagedKVPool, POOLABLE_FAMILIES,
+                      pages_for_budget, slots_for_budget)
 from .sampling import sample_rows
 
 
@@ -109,6 +110,15 @@ class ServeConfig:
     # ``n_slots`` — the knob that turns cache quantization into served
     # concurrency
     cache_budget_bytes: Optional[int] = None
+    # paged KV pool (DESIGN.md §15): ``new_pool()`` builds a PagedKVPool —
+    # per-slot page tables over a shared refcounted page arena with
+    # copy-on-write prefix sharing — instead of the fixed slab.  Output is
+    # bit-identical; capacity accounting becomes page-granular.
+    paged: bool = False
+    # arena page size in cache positions; 0 = prefill_chunk (pages are
+    # chunk-aligned by construction — any explicit value must be a
+    # multiple of prefill_chunk)
+    page_size: int = 0
     # optional jax.sharding.Mesh ('data' x 'model' axes): shard params and
     # the KV pool across it (DESIGN.md §10).  None = single-device jits.
     mesh: Any = None
@@ -300,6 +310,69 @@ class ServingEngine:
                 step, (cache, tokens, lengths, active, rem), keys)
             return cache, toks, valid
 
+        # ---- paged-pool steps (DESIGN.md §15) --------------------------
+        # Same step semantics over a PagedKVPool: ``cache`` is the page
+        # arena [L, n_pages, page_size, ...] and each step additionally
+        # takes the page table mapping slots to arena pages.  Inside the
+        # step, every attention layer gathers its slots' virtual slabs
+        # from the arena, runs the UNCHANGED slab attention math (einsum
+        # oracle or Pallas decode kernel), and scatters the updated slab
+        # back through the table — which is the paged pool's bit-identity
+        # contract: identical bytes in the identical [slot, pos] layout at
+        # every attended position.  The arena is donated exactly like the
+        # slab; the table is a tiny int32 array rebuilt from host state
+        # per dispatch (page mappings change between steps, not within).
+        def prefill_chunk_paged(params, tokens, cache, table_row, offset,
+                                with_logits):
+            """tokens [1, C] through the single slot whose page-table row
+            is ``table_row`` [1, pages_per_slot].  The whole arena rides
+            through (pages of one slot are scattered across it — there is
+            no contiguous sub-slab to slice out), but only this slot's
+            virtual slab is gathered/computed/scattered inside."""
+            logits, _, cache = T.forward(
+                mcfg, params, {"tokens": tokens}, cache=cache,
+                cache_index=offset, mode="prefill_chunk",
+                page_table=table_row)
+            return (logits[0] if with_logits else None), cache
+
+        def decode_slots_logits_paged(params, tokens, cache, lengths, table):
+            logits, _, cache = T.forward(mcfg, params, {"tokens": tokens},
+                                         cache=cache, cache_index=lengths,
+                                         mode="decode", page_table=table)
+            return logits[:, -1], cache
+
+        def decode_slots_paged(params, tokens, cache, lengths, keys, temps,
+                               table):
+            logits, _, cache = T.forward(mcfg, params, {"tokens": tokens},
+                                         cache=cache, cache_index=lengths,
+                                         mode="decode", page_table=table)
+            return sample_rows(logits[:, -1], keys, temps), cache
+
+        def decode_burst_paged(params, cache, tokens, lengths, active, rem,
+                               keys, temps, eos_ids, max_len, table):
+            """Paged twin of ``decode_burst``: the page table is loop-
+            invariant across the K scanned steps (the scheduler pins every
+            written page via ``ensure_decode`` BEFORE dispatch), so the
+            scan body closes over it and the carry stays identical to the
+            slab burst's."""
+            def step(carry, step_keys):
+                cache, tokens, lengths, active, rem = carry
+                logits, _, cache = T.forward(
+                    mcfg, params, {"tokens": tokens[:, None]}, cache=cache,
+                    cache_index=lengths, mode="decode", page_table=table)
+                sampled = sample_rows(logits[:, -1], step_keys, temps)
+                act = active.astype(jnp.int32)
+                lengths = lengths + act
+                rem = rem - act
+                stop_eos = (eos_ids >= 0) & (sampled == eos_ids)
+                still = active & ~stop_eos & (rem > 0) \
+                    & (lengths < max_len - 1)
+                tokens = jnp.where(active, sampled, tokens)
+                return (cache, tokens, lengths, still, rem), (sampled, active)
+            (cache, _, _, _, _), (toks, valid) = jax.lax.scan(
+                step, (cache, tokens, lengths, active, rem), keys)
+            return cache, toks, valid
+
         self._prefill = prefill
         self._decode = decode
         self._prefill_chunk_fn = prefill_chunk
@@ -316,6 +389,18 @@ class ServingEngine:
         self._decode_slots_logits = jax.jit(decode_slots_logits,
                                             donate_argnums=(2,))
         self._decode_burst = jax.jit(decode_burst, donate_argnums=(1,))
+        self._prefill_chunk_paged_fn = prefill_chunk_paged
+        self._decode_slots_paged_fn = decode_slots_paged
+        self._decode_slots_logits_paged_fn = decode_slots_logits_paged
+        self._decode_burst_paged_fn = decode_burst_paged
+        self._prefill_chunk_paged = jax.jit(
+            prefill_chunk_paged, donate_argnums=(2,), static_argnums=(5,))
+        self._decode_slots_paged = jax.jit(decode_slots_paged,
+                                           donate_argnums=(2,))
+        self._decode_slots_logits_paged = jax.jit(decode_slots_logits_paged,
+                                                  donate_argnums=(2,))
+        self._decode_burst_paged = jax.jit(decode_burst_paged,
+                                           donate_argnums=(1,))
 
     # ------------------------------------------------------------------
     # Mesh-aware step construction (DESIGN.md §10)
@@ -352,7 +437,11 @@ class ServingEngine:
         if self.mesh is None:
             return None
         from repro.runtime import partitioning as PT
-        spec = PT.serve_pool_pspec(self.cfg, self.mesh, pool.n_slots,
+        # Paged pools shard the page arena: the page axis takes the slab's
+        # slot (data) axis — pages ride where slots used to, so dp x tp
+        # sharding and donation survive the paging indirection unchanged.
+        rows = pool.n_pages if getattr(pool, "paged", False) else pool.n_slots
+        spec = PT.serve_pool_pspec(self.cfg, self.mesh, rows,
                                    kv_dtype=pool.kv_dtype)
         return PT.named(self.mesh, spec)
 
@@ -376,10 +465,16 @@ class ServingEngine:
         different compiled specializations of one wrapper.)
         """
         self._declare_execution()
+        paged = getattr(pool, "paged", False)
         if self.mesh is None:
+            if paged:
+                return (self._prefill_chunk_paged, self._decode_slots_paged,
+                        self._decode_slots_logits_paged,
+                        self._decode_burst_paged)
             return (self._prefill_chunk, self._decode_slots,
                     self._decode_slots_logits, self._decode_burst)
-        key = (pool.n_slots, pool.capacity, pool.kv_dtype)
+        key = (pool.n_slots, pool.capacity, pool.kv_dtype, paged,
+               getattr(pool, "n_pages", 0), getattr(pool, "page_size", 0))
         steps = self._sharded_steps.get(key)
         if steps is None:
             from repro.runtime import partitioning as PT
@@ -391,27 +486,55 @@ class ServingEngine:
             keys_sh = NamedSharding(self.mesh, burst["row_keys"])
             sched_sh = NamedSharding(self.mesh, burst["key_schedule"])
             out_sh = NamedSharding(self.mesh, burst["burst_out"])
-            pc = jax.jit(
-                self._prefill_chunk_fn, donate_argnums=(2,),
-                static_argnums=(5,),
-                in_shardings=(self._param_shardings, rep, cache_sh, rep, rep),
-                out_shardings=(None, cache_sh))
-            ds = jax.jit(
-                self._decode_slots_fn, donate_argnums=(2,),
-                in_shardings=(self._param_shardings, tok_sh, cache_sh,
-                              len_sh, keys_sh, len_sh),
-                out_shardings=(len_sh, cache_sh))
-            dl = jax.jit(
-                self._decode_slots_logits_fn, donate_argnums=(2,),
-                in_shardings=(self._param_shardings, tok_sh, cache_sh,
-                              len_sh),
-                out_shardings=(None, cache_sh))
-            db = jax.jit(
-                self._decode_burst_fn, donate_argnums=(1,),
-                in_shardings=(self._param_shardings, cache_sh, len_sh,
-                              len_sh, len_sh, len_sh, sched_sh, len_sh,
-                              len_sh, rep),
-                out_shardings=(cache_sh, out_sh, out_sh))
+            if paged:
+                # the page table rides the slot (data) axis like lengths;
+                # the single-row prefill table is replicated like its chunk
+                table_sh = NamedSharding(self.mesh, burst["row_keys"])
+                pc = jax.jit(
+                    self._prefill_chunk_paged_fn, donate_argnums=(2,),
+                    static_argnums=(5,),
+                    in_shardings=(self._param_shardings, rep, cache_sh,
+                                  rep, rep),
+                    out_shardings=(None, cache_sh))
+                ds = jax.jit(
+                    self._decode_slots_paged_fn, donate_argnums=(2,),
+                    in_shardings=(self._param_shardings, tok_sh, cache_sh,
+                                  len_sh, keys_sh, len_sh, table_sh),
+                    out_shardings=(len_sh, cache_sh))
+                dl = jax.jit(
+                    self._decode_slots_logits_paged_fn, donate_argnums=(2,),
+                    in_shardings=(self._param_shardings, tok_sh, cache_sh,
+                                  len_sh, table_sh),
+                    out_shardings=(None, cache_sh))
+                db = jax.jit(
+                    self._decode_burst_paged_fn, donate_argnums=(1,),
+                    in_shardings=(self._param_shardings, cache_sh, len_sh,
+                                  len_sh, len_sh, len_sh, sched_sh, len_sh,
+                                  len_sh, rep, table_sh),
+                    out_shardings=(cache_sh, out_sh, out_sh))
+            else:
+                pc = jax.jit(
+                    self._prefill_chunk_fn, donate_argnums=(2,),
+                    static_argnums=(5,),
+                    in_shardings=(self._param_shardings, rep, cache_sh, rep,
+                                  rep),
+                    out_shardings=(None, cache_sh))
+                ds = jax.jit(
+                    self._decode_slots_fn, donate_argnums=(2,),
+                    in_shardings=(self._param_shardings, tok_sh, cache_sh,
+                                  len_sh, keys_sh, len_sh),
+                    out_shardings=(len_sh, cache_sh))
+                dl = jax.jit(
+                    self._decode_slots_logits_fn, donate_argnums=(2,),
+                    in_shardings=(self._param_shardings, tok_sh, cache_sh,
+                                  len_sh),
+                    out_shardings=(None, cache_sh))
+                db = jax.jit(
+                    self._decode_burst_fn, donate_argnums=(1,),
+                    in_shardings=(self._param_shardings, cache_sh, len_sh,
+                                  len_sh, len_sh, len_sh, sched_sh, len_sh,
+                                  len_sh, rep),
+                    out_shardings=(cache_sh, out_sh, out_sh))
             steps = self._sharded_steps[key] = (pc, ds, dl, db)
         return steps
 
@@ -430,6 +553,25 @@ class ServingEngine:
         tier = self.scfg.kv_dtype if kv_dtype is None \
             else validate_kv_tier(kv_dtype, self.cfg)
         max_len = max_len or self.scfg.max_len
+        if self.scfg.paged:
+            # page-granular budget accounting (DESIGN.md §15): the budget
+            # buys an ARENA of pages, not worst-case max_len slots — slots
+            # stay at the configured width (a slot is just a batch row; it
+            # costs nothing until its request commits pages).
+            page_size = self.scfg.page_size or self.scfg.prefill_chunk
+            n_slots = n_slots or self.scfg.n_slots
+            n_pages = None
+            if self.scfg.cache_budget_bytes is not None:
+                n_pages = pages_for_budget(
+                    self.cfg, max_len, self.scfg.cache_budget_bytes,
+                    kv_dtype=tier, page_size=page_size,
+                    align=self.scfg.prefill_chunk)
+            pool = PagedKVPool(self.cfg, n_slots, max_len, kv_dtype=tier,
+                               align=self.scfg.prefill_chunk,
+                               page_size=page_size, n_pages=n_pages)
+            if self.mesh is not None:
+                pool.place(self.pool_shardings(pool))
+            return pool
         if n_slots is None:
             if self.scfg.cache_budget_bytes is not None:
                 n_slots = slots_for_budget(
@@ -481,9 +623,18 @@ class ServingEngine:
         chunk = prompt[offset:offset + C][None]       # view, no allocation
         final = offset + n >= prompt_len
         prefill_chunk = self._steps_for(pool)[0]
-        logits, pool.cache = prefill_chunk(
-            self.params, jnp.asarray(chunk), pool.cache,
-            jnp.int32(slot), jnp.int32(offset), final)
+        if getattr(pool, "paged", False):
+            # pin the chunk's write window (fresh pages / COW of a shared
+            # page on a full-cover prefix hit) before the jitted write
+            pool.ensure(slot, offset + C)
+            logits, pool.cache = prefill_chunk(
+                self.params, jnp.asarray(chunk), pool.cache,
+                jnp.asarray(pool.page_table[slot:slot + 1]),
+                jnp.int32(offset), final)
+        else:
+            logits, pool.cache = prefill_chunk(
+                self.params, jnp.asarray(chunk), pool.cache,
+                jnp.int32(slot), jnp.int32(offset), final)
         pool.lengths[slot] = offset + n
         return jax.block_until_ready(logits) if final else None
 
@@ -519,10 +670,16 @@ class ServingEngine:
         if temperatures is None:
             temperatures = np.zeros((n,), np.float32)
         decode_slots = self._steps_for(pool)[1]
-        toks, pool.cache = decode_slots(
-            self.params, jnp.asarray(tokens), pool.cache,
-            jnp.asarray(pool.lengths), jnp.asarray(keys, jnp.uint32),
-            jnp.asarray(temperatures, jnp.float32))
+        step_args = (self.params, jnp.asarray(tokens), pool.cache,
+                     jnp.asarray(pool.lengths), jnp.asarray(keys, jnp.uint32),
+                     jnp.asarray(temperatures, jnp.float32))
+        if getattr(pool, "paged", False):
+            # paged pools: the caller (scheduler) must have pinned every
+            # active row's write position via ``pool.ensure_decode`` —
+            # inactive rows' garbage writes flow to the reserved garbage
+            # page through their unmapped (entry-0) table slots.
+            step_args += (jnp.asarray(pool.page_table),)
+        toks, pool.cache = decode_slots(*step_args)
         return np.asarray(toks)
 
     def decode_slots_with_logits(self, pool: KVCachePool,
@@ -532,9 +689,11 @@ class ServingEngine:
         [n_slots, V] logits — one host transfer of the whole logit block."""
         tokens = np.asarray(tokens, np.int32).reshape(pool.n_slots, 1)
         decode_logits = self._steps_for(pool)[2]
-        logits, pool.cache = decode_logits(
-            self.params, jnp.asarray(tokens), pool.cache,
-            jnp.asarray(pool.lengths))
+        step_args = (self.params, jnp.asarray(tokens), pool.cache,
+                     jnp.asarray(pool.lengths))
+        if getattr(pool, "paged", False):
+            step_args += (jnp.asarray(pool.page_table),)
+        logits, pool.cache = decode_logits(*step_args)
         return jax.block_until_ready(logits)
 
     def decode_burst(self, pool: KVCachePool, tokens: np.ndarray,
@@ -558,13 +717,18 @@ class ServingEngine:
         assert key_schedule.shape == (K, n, 2), key_schedule.shape
         tokens = np.asarray(tokens, np.int32).reshape(n)
         decode_burst = self._steps_for(pool)[3]
-        pool.cache, toks, valid = decode_burst(
+        step_args = (
             self.params, pool.cache, jnp.asarray(tokens),
             jnp.asarray(pool.lengths), jnp.asarray(active, bool),
             jnp.asarray(remaining, jnp.int32),
             jnp.asarray(key_schedule, jnp.uint32),
             jnp.asarray(temperatures, jnp.float32),
             jnp.asarray(eos_ids, jnp.int32), jnp.int32(pool.max_len))
+        if getattr(pool, "paged", False):
+            # write windows for the whole K-step burst must be pinned
+            # (``pool.ensure_decode(slots, K, rems)``) before this dispatch
+            step_args += (jnp.asarray(pool.page_table),)
+        pool.cache, toks, valid = decode_burst(*step_args)
         toks = np.asarray(toks)                       # the burst's one sync
         valid = np.asarray(valid)
         pool.lengths += valid.sum(axis=0).astype(np.int32)

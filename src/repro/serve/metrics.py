@@ -96,6 +96,15 @@ class ServeMetrics:
         # ``n_slots`` above is always the total across tiers
         self.tiers: Optional[Dict[str, int]] = None
         self.ttft: List[float] = []
+        # TTFT split by prefix-cache outcome (paged pools, DESIGN.md §15):
+        # a hit adopts cached prompt pages and skips their prefill chunks,
+        # so hit TTFT should sit measurably below miss TTFT — the split is
+        # the direct evidence.  Slab pools only ever fill ttft_miss.
+        self.ttft_hit: List[float] = []
+        self.ttft_miss: List[float] = []
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.prefix_hit_tokens = 0
         self.itl: List[float] = []
         self.itl_spread: List[float] = []     # burst-spread ITL estimate
         self.e2e: List[float] = []            # per-request total latency
@@ -190,9 +199,16 @@ class ServeMetrics:
         self.total_new_tokens += req.n_generated
         self.last_finish = req.finish_time
         ttft = e2e = None
+        hit_tokens = getattr(req, "prefix_hit_tokens", 0)
+        if hit_tokens > 0:
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += hit_tokens
+        else:
+            self.prefix_misses += 1
         if req.first_token_time is not None and req.arrival_time is not None:
             ttft = req.first_token_time - req.arrival_time
             self.ttft.append(ttft)
+            (self.ttft_hit if hit_tokens > 0 else self.ttft_miss).append(ttft)
         if req.finish_time is not None and req.arrival_time is not None:
             e2e = req.finish_time - req.arrival_time
             self.e2e.append(e2e)
@@ -254,6 +270,17 @@ class ServeMetrics:
             # ITL timestamps are burst-granular once any K > 1 ran
             out["itl_granularity"] = ("burst" if any(
                 k > 1 for k in self.burst_hist) else "token")
+        if self.prefix_hits:
+            out["prefix_hits"] = self.prefix_hits
+            out["prefix_misses"] = self.prefix_misses
+            out["prefix_hit_rate"] = round(
+                self.prefix_hits / (self.prefix_hits + self.prefix_misses), 4)
+            out["prefix_hit_tokens"] = self.prefix_hit_tokens
+            for name, xs in (("ttft_hit", self.ttft_hit),
+                             ("ttft_miss", self.ttft_miss)):
+                if xs:
+                    out[f"{name}_mean_s"] = round(float(np.mean(xs)), 4)
+                    out[f"{name}_p50_s"] = round(_pct(xs, 50), 4)
         for name, xs in (("ttft", self.ttft), ("itl", self.itl),
                          ("e2e_latency", self.e2e)):
             if xs:

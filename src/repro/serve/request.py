@@ -61,6 +61,10 @@ class Request:
     tier: Optional[str] = None               # resolved at submit()
     slot: Optional[int] = None               # KV pool slot while admitted
     prefill_pos: int = 0                     # prompt positions in cache
+    # prompt tokens adopted from the paged pool's prefix cache at
+    # admission (0 on a slab pool or a prefix miss) — prefill resumes
+    # past them, which is the TTFT win metrics split hit/miss on
+    prefix_hit_tokens: int = 0
     # chunk-padded prompt buffer (engine.pad_prompt), built once at
     # admission so the per-chunk prefill loop slices views instead of
     # allocating per chunk

@@ -159,7 +159,10 @@ class Scheduler:
         registry = obs.registry if obs is not None else None
         self._r_steps = self._r_queue = self._r_used = None
         self._r_adm = self._r_chunks = self._r_syncs = None
+        self._r_hits = self._r_hit_tokens = self._r_pages = None
         self._syncs_published = 0
+        self._any_paged = any(getattr(p, "paged", False)
+                              for p in self.pools.values())
         if registry is not None:
             self._r_steps = registry.counter(
                 "serve_scheduler_steps_total", "scheduling rounds")
@@ -180,6 +183,17 @@ class Scheduler:
             self._r_syncs = registry.counter(
                 "serve_host_syncs_total",
                 "blocking device->host transfers on the serving hot path")
+            if self._any_paged:
+                self._r_hits = registry.counter(
+                    "serve_prefix_hits_total",
+                    "admissions that adopted cached prefix pages, by tier")
+                self._r_hit_tokens = registry.counter(
+                    "serve_prefix_hit_tokens_total",
+                    "prompt tokens served from the prefix cache, by tier")
+                self._r_pages = registry.gauge(
+                    "serve_pages",
+                    "page-arena occupancy, by tier and state "
+                    "(used / cached / free)")
         self.metrics = ServeMetrics(
             sum(p.n_slots for p in self.pools.values()), registry=registry)
         if len(self.pools) > 1:
@@ -305,13 +319,31 @@ class Scheduler:
                     break
                 req = self.waiting.popleft()
                 pool = self.pools[req.tier]
-                if not pool.n_free:
-                    still.append(req)
-                    continue
-                req.slot = pool.alloc()
+                if getattr(pool, "paged", False):
+                    # paged admission (DESIGN.md §15): a slot AND enough
+                    # arena pages for the request's worst-case growth; a
+                    # prefix-cache hit adopts shared pages and resumes
+                    # prefill past them (full-cover hits re-run only the
+                    # final chunk for its first-token logits)
+                    adm = pool.admit(req.prompt,
+                                     req.sampling.max_new_tokens)
+                    if adm is None:
+                        still.append(req)
+                        continue
+                    req.slot, req.prefill_pos, req.prefix_hit_tokens = adm
+                    if self._r_hits is not None \
+                            and req.prefix_hit_tokens > 0:
+                        self._r_hits.inc(tier=req.tier)
+                        self._r_hit_tokens.inc(req.prefix_hit_tokens,
+                                               tier=req.tier)
+                else:
+                    if not pool.n_free:
+                        still.append(req)
+                        continue
+                    req.slot = pool.alloc()
+                    req.prefill_pos = 0
                 free_total -= 1
                 req.state = RequestState.PREFILL
-                req.prefill_pos = 0
                 # one-time prompt pre-pass: int32 + chunk padding hoisted
                 # out of the per-chunk loop (engine slices views from it)
                 if req.prompt_padded is None:
@@ -342,6 +374,11 @@ class Scheduler:
             final = req.prefill_pos >= req.prompt_len
             if final:
                 req.state = RequestState.DECODE
+                if getattr(pool, "paged", False):
+                    # publish the prompt's whole pages to the prefix
+                    # cache — later requests with the same token prefix
+                    # adopt them instead of re-prefilling
+                    pool.register_prefix(req.slot, req.prompt)
                 # two blocking transfers: the final-chunk logits and the
                 # sampled first token
                 self.n_host_syncs += 2
@@ -398,6 +435,15 @@ class Scheduler:
             # n_host_syncs remains the raw baseline-pinned tally
             self._r_syncs.inc(self.n_host_syncs - self._syncs_published)
             self._syncs_published = self.n_host_syncs
+            if self._r_pages is not None:
+                for t, p in sorted(self.pools.items()):
+                    if getattr(p, "paged", False):
+                        self._r_pages.set(p.pages_in_use, tier=t,
+                                          state="used")
+                        self._r_pages.set(p.pages_cached, tier=t,
+                                          state="cached")
+                        self._r_pages.set(p.pages_free, tier=t,
+                                          state="free")
         if self.tracer is not None:
             self.tracer.counter("queue_depth", now,
                                 {"waiting": len(self.waiting)})
@@ -435,6 +481,10 @@ class Scheduler:
         for r in dec:
             tokens[r.slot] = r.last_token
         self._key_schedule(dec, 1, keys, temps)
+        if getattr(pool, "paged", False):
+            # pin every active row's write position (fresh page at a page
+            # boundary) before the dispatch writes there
+            pool.ensure_decode([r.slot for r in dec], 1)
         self._dispatch_seq += 1
         ctx = self._cohort_context(dec, pool)
         t0 = self._clock() if self._timed else 0.0
@@ -468,6 +518,13 @@ class Scheduler:
             active[r.slot] = True
             rem[r.slot] = r.sampling.max_new_tokens - r.n_generated
         self._key_schedule(dec, k, keys, temps)
+        if getattr(pool, "paged", False):
+            # pin the whole K-step write window per row, capped at each
+            # row's remaining budget — overshoot writes from rows that
+            # freeze mid-burst land in the garbage page via their
+            # unmapped table entries, not in allocated pages
+            pool.ensure_decode([r.slot for r in dec], k,
+                               [int(rem[r.slot]) for r in dec])
         self._dispatch_seq += 1
         ctx = self._cohort_context(dec, pool)
         t0 = self._clock() if self._timed else 0.0

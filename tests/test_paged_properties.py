@@ -1,0 +1,139 @@
+"""Hypothesis property tests for the page allocator (DESIGN.md §15).
+
+``PageAllocator`` is deliberately pure host-side python-over-numpy so its
+whole state machine — free list, refcounts, page tables, content-keyed
+prefix cache, LRU eviction, reservation accounting — can be driven by
+random operation sequences with ``check()`` (which asserts every §15
+bookkeeping invariant, including refcount == table-refs + cache-refs by
+exact bincount) after EVERY mutation.  The deterministic lifecycle tests
+live in tests/test_paged_pool.py; this suite explores the long tail:
+interleaved admits / ensures / registrations / frees over a tiny token
+alphabet (so prefix hits, COW and eviction all trigger often) on arenas
+from the legal minimum up to over-provisioned.
+
+Operations are drawn only within the scheduler's contract (prompts fit
+the slot, ``ensure`` stays within the admission reservation window), so
+``RuntimeError: page arena exhausted`` would be a genuine accounting bug,
+not an out-of-contract call.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve import PageAllocator  # noqa: E402
+
+PS = 4          # page size (== align: chunk-aligned pages, engine contract)
+
+
+def _ops(draw):
+    """One drawn scenario: arena geometry + an operation tape."""
+    n_slots = draw(st.integers(1, 4))
+    pps = draw(st.integers(1, 4))
+    n_pages = draw(st.integers(1 + pps, 1 + n_slots * pps + 2))
+    n_ops = draw(st.integers(1, 40))
+    return n_slots, pps, n_pages, n_ops
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_random_op_sequences_preserve_every_invariant(data):
+    n_slots, pps, n_pages, n_ops = _ops(data.draw)
+    a = PageAllocator(n_pages, PS, n_slots, pps, align=PS)
+    capacity = pps * PS
+    # slot -> [tokens, max_new, watermark(write-ensured positions)]
+    live = {}
+
+    for _ in range(n_ops):
+        op = data.draw(st.sampled_from(["admit", "ensure", "register",
+                                        "free"]))
+        if op == "admit":
+            p_len = data.draw(st.integers(1, capacity))
+            max_new = data.draw(st.integers(0, capacity - p_len))
+            # 3-token alphabet: page-content collisions (prefix hits,
+            # adoption, COW) happen constantly
+            tokens = data.draw(st.lists(st.integers(0, 2), min_size=p_len,
+                                        max_size=p_len))
+            fits = a.can_admit(tokens, max_new)
+            r = a.admit(tokens, max_new)
+            assert (r is not None) == fits
+            if r is not None:
+                slot, prefill_pos, hit_tokens, copies = r
+                assert slot not in live
+                assert hit_tokens % PS == 0 and 0 <= hit_tokens <= p_len
+                assert 0 <= prefill_pos <= max(0, p_len - 1)
+                assert prefill_pos % PS == 0
+                # admission makes the first write page private NOW
+                for src, dst in copies:
+                    assert src != dst and int(a.refcounts[dst]) == 1
+                live[slot] = [tokens, max_new, prefill_pos + 1]
+        elif op == "ensure" and live:
+            slot = data.draw(st.sampled_from(sorted(live)))
+            tokens, max_new, w = live[slot]
+            limit = min(len(tokens) + max_new, capacity)
+            if w < limit:
+                upto = data.draw(st.integers(w, limit))
+                copies = a.ensure(slot, w, upto)
+                for src, dst in copies:
+                    assert src != dst and int(a.refcounts[dst]) == 1
+                # the just-ensured window is privately owned (adopted
+                # prefix pages sit strictly below it and MAY be shared;
+                # registered pages likewise never reach the write window)
+                for idx in range(w // PS, -(-upto // PS)):
+                    page = int(a.table[slot, idx])
+                    assert page != 0, "ensured window left unmapped"
+                    assert page not in a.page_key, \
+                        "write-window page is registered"
+                    assert int(a.refcounts[page]) == 1, \
+                        "ensured page still shared across slots"
+                live[slot][2] = max(w, upto)
+        elif op == "register" and live:
+            slot = data.draw(st.sampled_from(sorted(live)))
+            tokens, _, w = live[slot]
+            if w >= len(tokens):      # only fully-prefilled prompts publish
+                n = a.register_prefix(slot, tokens)
+                assert 0 <= n <= len(tokens) // PS
+        elif op == "free" and live:
+            slot = data.draw(st.sampled_from(sorted(live)))
+            a.free_slot(slot)
+            del live[slot]
+        a.check()
+
+    # drain: every slot returns; only cache-held pages may remain
+    for slot in sorted(live):
+        a.free_slot(slot)
+    a.check()
+    assert a.pages_in_use == 0
+    assert a.n_free_slots == n_slots
+    assert a.pages_free + a.pages_cached == n_pages - 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_registered_prefixes_hit_until_evicted(data):
+    """Determinism of the content-keyed cache: admit -> ensure -> register
+    -> free -> re-admit the SAME prompt hits every registered whole page
+    (nothing else ran in between, so nothing can have been evicted)."""
+    pps = data.draw(st.integers(1, 4))
+    a = PageAllocator(1 + 2 * pps, PS, 2, pps, align=PS)
+    p_len = data.draw(st.integers(PS, pps * PS))
+    tokens = data.draw(st.lists(st.integers(0, 2), min_size=p_len,
+                                max_size=p_len))
+    slot, pos, hit, _ = a.admit(tokens, 0)
+    assert hit == 0
+    a.ensure(slot, pos + 1, p_len)
+    registered = a.register_prefix(slot, tokens)
+    assert registered == p_len // PS
+    a.free_slot(slot)
+    a.check()
+    r = a.admit(tokens, 0)
+    assert r is not None
+    assert r[2] == (p_len // PS) * PS
+    # full-cover hits resume at the final chunk so first-token logits are
+    # recomputed; partial hits resume exactly past the cached pages
+    if r[2] == p_len:
+        assert r[1] == ((p_len - 1) // PS) * PS
+    else:
+        assert r[1] == r[2]
+    a.check()

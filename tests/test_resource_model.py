@@ -88,3 +88,31 @@ def test_gemv_compute_bound_at_large_batch():
     r1 = gemv_latency_s(cfg, 1, 4096, 4096)
     r64 = gemv_latency_s(cfg, 64, 4096, 4096)
     assert r1["bound"] == "memory" and r64["bound"] == "compute"
+
+
+def test_decode_latency_gemv_engine_pricing_is_datatype_adaptive():
+    """Routing the channel-streaming GEMV engine into ``decode_latency``
+    makes the compute phase per-datatype: a 4-bit scheme runs its
+    projections on 4x the MAC lanes of bf16 from the same channels, and
+    the memory phase is derated by the engine's measured HBM utilization
+    — the serving profiler's default pricing (obs/profiler.py)."""
+    from repro.configs import get_config
+    from repro.perfmodel import decode_latency, gemv_engine_for
+
+    int4 = gemv_engine_for("awq_int4")
+    bf16 = gemv_engine_for("bf16")
+    assert int4.n_mac_per_channel == 4 * bf16.n_mac_per_channel
+
+    cfg = get_config("granite-8b", smoke=True)
+    kw = dict(batch=8, context=512, design="xtramac")
+    flat = decode_latency(cfg, "awq_int4", **kw)
+    priced = decode_latency(cfg, "awq_int4", engine_model=int4, **kw)
+    # engine pricing: quant units are the engine's lane count, and the
+    # memory phase pays the 74% effective-bandwidth derate
+    assert priced["units_quant"] == int4.macs_per_cycle
+    assert priced["units_quant"] != flat["units_quant"]
+    assert priced["t_mem_s"] > flat["t_mem_s"]
+    # same engine, wider weights -> fewer lanes -> slower compute phase
+    w8 = decode_latency(cfg, "w8a8", engine_model=gemv_engine_for("w8a8"),
+                        **kw)
+    assert w8["t_compute_s"] > priced["t_compute_s"]
