@@ -81,6 +81,41 @@ writes per-point Chrome traces (Perfetto-loadable), Prometheus-style
 expositions and registry snapshots; ``--hlo-cost`` joins trip-count-aware
 FLOP/byte counts of the compiled step.
 
+**Adversarial workloads + SLO (DESIGN.md §16)**: ``--arrival bursty
+--burst-size B`` replaces the smooth Poisson process with Poisson-spaced
+bursts of B simultaneous arrivals, and ``--prompt-dist heavy`` draws
+prompt lengths from a clipped Pareto (many short, a heavy tail at
+``--prompt-len``) — the two shapes that break schedulers tuned on smooth
+traffic.  ``--priority-mix 0:0.25,5:0.75`` assigns seeded priority
+classes; the report then carries per-priority TTFT/e2e percentiles and
+queue waits.  ``--slo-max-waiting`` / ``--slo-max-queue-delay-s`` /
+``--slo-downgrade FROM:TO --slo-high-s H --slo-low-s L`` /
+``--slo-max-step-s`` attach a ``serve.slo.SLOPolicy`` (admission
+control, tier downgrade with hysteresis, cost-model burst planning).
+``--fault-rate R`` arms a seeded fault injector AFTER warmup: each
+engine dispatch dies (or NaN-poisons) with probability R and the
+scheduler recovers by preempt-and-requeue — the bench asserts the
+accounting identity (every submitted request lands in exactly one
+finish reason) on every run, faults or not.  The committed overload
+pair in ``BENCH_serve_baseline.json``:
+
+    # ~2x sustained overload, FCFS: every class queues behind everyone,
+    # so tail TTFT ~ the whole backlog drain (grows without bound as
+    # load is sustained)
+    python benchmarks/serve_bench.py --requests 24 --rate 40 --seed 0 \
+        --n-slots 2 --max-new 16 --max-burst 8 --arrival bursty \
+        --burst-size 4 --prompt-dist heavy \
+        --baseline-json benchmarks/BENCH_serve_baseline.json
+    # same workload, 25% priority-0 traffic + admission control: the
+    # high class preempts its way to a bounded p99 TTFT (~20x below the
+    # FCFS tail) while best-effort is queued/shed with typed rejections
+    # (counters account for every submitted request)
+    python benchmarks/serve_bench.py --requests 24 --rate 40 --seed 0 \
+        --n-slots 2 --max-new 16 --max-burst 8 --arrival bursty \
+        --burst-size 4 --prompt-dist heavy --priority-mix 0:0.25,5:0.75 \
+        --slo-max-waiting 8 \
+        --baseline-json benchmarks/BENCH_serve_baseline.json
+
 Smoke (CPU, ~1 min incl. compile):
     python benchmarks/serve_bench.py
 Burst amortization sweep:
@@ -112,7 +147,65 @@ import numpy as np
 from repro.launch.cli import force_host_devices, serving_mesh
 
 
-def build_engine(args, cfg, params, kv_dtype, mesh, policy=None):
+def parse_priority_mix(spec):
+    """``"0:0.25,5:0.75"`` -> (classes, normalized weights) or None."""
+    if not spec:
+        return None
+    classes, weights = [], []
+    for part in spec.split(","):
+        prio, w = part.split(":")
+        classes.append(int(prio))
+        weights.append(float(w))
+    total = sum(weights)
+    if total <= 0:
+        raise SystemExit("--priority-mix weights must sum > 0")
+    return classes, [w / total for w in weights]
+
+
+def build_slo(args):
+    """An ``SLOPolicy`` from the --slo-* flags, or None when none given."""
+    downgrade = None
+    if args.slo_downgrade:
+        src, dst = args.slo_downgrade.split(":")
+        downgrade = {src: dst}
+    if not any([args.slo_max_waiting, args.slo_max_queue_delay_s,
+                downgrade, args.slo_max_step_s]):
+        return None
+    from repro.serve import SLOPolicy
+    return SLOPolicy(
+        max_waiting=args.slo_max_waiting,
+        max_queue_delay_s=args.slo_max_queue_delay_s,
+        protect_priority=args.slo_protect_priority,
+        downgrade_map=downgrade,
+        downgrade_high_s=args.slo_high_s,
+        downgrade_low_s=args.slo_low_s,
+        max_step_s=args.slo_max_step_s)
+
+
+def build_fault_injector(args):
+    """Seeded ``(kind, seq) -> mode`` injector, DISARMED until the timed
+    run starts (warmup compiles off the clock and must not fault).
+    Deterministic: its own generator, decoupled from the workload rng, is
+    consulted once per dispatch in dispatch order.  Returns
+    (injector, arm) — call ``arm()`` after warmup."""
+    if not args.fault_rate:
+        return None, lambda: None
+    frng = np.random.default_rng(args.seed + 7919)
+    armed = []
+
+    def injector(kind, seq):
+        if not armed or frng.random() >= args.fault_rate:
+            return None
+        # half the faults kill the dispatch (StepFault), half NaN-poison
+        # the sampled tokens (prefill kills regardless: 'nan' only
+        # applies to decode paths, see ServeConfig.fault_injector)
+        return "nan" if frng.random() < 0.5 else "injected"
+
+    return injector, lambda: armed.append(True)
+
+
+def build_engine(args, cfg, params, kv_dtype, mesh, policy=None,
+                 fault_injector=None):
     import dataclasses
 
     from repro.quant.policy import PrecisionPolicy
@@ -141,14 +234,30 @@ def build_engine(args, cfg, params, kv_dtype, mesh, policy=None):
                        n_slots=args.n_slots, prefill_chunk=args.chunk,
                        cache_budget_bytes=budget,
                        paged=args.paged, page_size=args.page_size,
-                       max_burst=args.max_burst, mesh=mesh, policy=policy)
+                       max_burst=args.max_burst, mesh=mesh, policy=policy,
+                       fault_injector=fault_injector,
+                       max_fault_retries=args.max_fault_retries)
     engine = ServingEngine(cfg, params, scfg)
     print(f"== precision policy: {engine.policy.to_json()}")
     return engine
 
 
 def make_workload(args, vocab):
-    """Seeded Poisson arrivals with jittered prompt lengths.
+    """Seeded arrivals with jittered prompt lengths and priority classes.
+
+    Arrivals: ``--arrival poisson`` (default) is the smooth process;
+    ``--arrival bursty --burst-size B`` draws Poisson-spaced burst epochs
+    at rate/B and drops B simultaneous arrivals on each — same long-run
+    rate, adversarial short-run backlog (DESIGN.md §16).
+
+    Prompt lengths: uniform jitter by default; ``--prompt-dist heavy``
+    draws a clipped Pareto (alpha=1.2) — mostly short prompts with a
+    heavy tail pinned at ``--prompt-len``, so occasional giants stall
+    chunked prefill behind them.  Both stay within the slot geometry
+    (``max_len`` is sized from ``--prompt-len``).
+
+    Priorities: ``--priority-mix "0:0.25,5:0.75"`` assigns each request a
+    seeded class draw (smaller = more important); None -> all class 0.
 
     With ``--prefix-len N --prefix-share F`` a fraction F of the requests
     share ONE common N-token prefix ahead of their unique tail (the
@@ -158,10 +267,21 @@ def make_workload(args, vocab):
     first of them has prefilled and registered (DESIGN.md §15); on the
     slab pool the same workload measures the no-sharing baseline."""
     rng = np.random.default_rng(args.seed)
-    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
-    arrivals[0] = 0.0                      # first request starts the clock
-    lens = rng.integers(max(2, args.prompt_len // 2), args.prompt_len + 1,
-                        args.requests)
+    if args.arrival == "bursty" and args.burst_size > 1:
+        B = args.burst_size
+        n_bursts = -(-args.requests // B)
+        epochs = np.cumsum(rng.exponential(B / args.rate, n_bursts))
+        arrivals = np.repeat(epochs, B)[:args.requests]
+    else:
+        arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    arrivals = arrivals - arrivals[0]      # first request starts the clock
+    if args.prompt_dist == "heavy":
+        scale = max(2, args.prompt_len // 8)
+        raw = (rng.pareto(1.2, args.requests) + 1.0) * scale
+        lens = np.clip(raw.astype(np.int64), 2, args.prompt_len)
+    else:
+        lens = rng.integers(max(2, args.prompt_len // 2),
+                            args.prompt_len + 1, args.requests)
     shared = rng.random(args.requests) < args.prefix_share
     prefix = rng.integers(1, vocab, (args.prefix_len,)).astype(np.int32)
     prompts = []
@@ -170,7 +290,13 @@ def make_workload(args, vocab):
                             (int(n) + (0 if s else args.prefix_len),)
                             ).astype(np.int32)
         prompts.append(np.concatenate([prefix, tail]) if s else tail)
-    return arrivals, prompts
+    mix = parse_priority_mix(args.priority_mix)
+    if mix is None:
+        priorities = np.zeros(args.requests, np.int64)
+    else:
+        classes, weights = mix
+        priorities = rng.choice(classes, size=args.requests, p=weights)
+    return arrivals, prompts, priorities
 
 
 def warmup(engine, prompts, max_new, tiers=None):
@@ -198,13 +324,18 @@ def warmup(engine, prompts, max_new, tiers=None):
 
 
 def point_label(cfg, kv_dtype, tiers, max_burst, weight_kernel="auto",
-                paged=False):
+                paged=False, args=None):
     label = "+".join(tiers) if tiers else kv_dtype
     stem = f"serve_{cfg.name}_{label.replace('+', '-')}_burst{max_burst}"
     if weight_kernel != "auto":
         stem += f"_wk{weight_kernel}"   # --weight-kernel on|off points
     if paged:
         stem += "_paged"                # paged-vs-slab pairs (DESIGN.md §15)
+    if args is not None:                # adversarial pairs (DESIGN.md §16):
+        if args.priority_mix:           # FCFS-vs-priority points must not
+            stem += "_prio"             # collide in a shared --out-dir
+        if args.fault_rate:
+            stem += "_fault"
     return stem
 
 
@@ -220,7 +351,7 @@ def bench_env():
             "device_kind": dev.device_kind, "n_devices": jax.device_count()}
 
 
-def run_point(args, cfg, engine, kv_dtype, tiers=None):
+def run_point(args, cfg, engine, kv_dtype, tiers=None, arm_fault=None):
     """One sweep point: the seeded workload at one pool dtype — or, with
     ``tiers``, the MIXED-TIER workload: one engine, one pool per KV tier,
     requests assigned tiers round-robin (``Request.kv_policy``) so
@@ -235,11 +366,16 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None):
     from repro.obs import (MetricsRegistry, Observability, SnapshotWriter,
                            StepProfiler, Tracer)
     from repro.serve import Request, SamplingParams, Scheduler
-    arrivals, prompts = make_workload(args, cfg.vocab)
+    arrivals, prompts, priorities = make_workload(args, cfg.vocab)
     if not args.no_warmup:
         t0 = time.monotonic()
         warmup(engine, prompts, args.max_new, tiers=tiers)
         print(f"== warmup (compile) {time.monotonic() - t0:.1f}s")
+    if arm_fault is not None:
+        arm_fault()        # faults only in the timed run, never in warmup
+    slo = build_slo(args)
+    if slo is not None:
+        print(f"== slo: {json.dumps(slo.snapshot())}")
 
     obs = Observability(profiler=StepProfiler(cfg))
     stem = None
@@ -247,11 +383,12 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None):
         os.makedirs(args.trace_dir, exist_ok=True)
         stem = os.path.join(args.trace_dir,
                             point_label(cfg, kv_dtype, tiers, args.max_burst,
-                                        args.weight_kernel, args.paged))
+                                        args.weight_kernel, args.paged,
+                                        args=args))
         obs.tracer = Tracer()
         obs.registry = MetricsRegistry()
         obs.snapshots = SnapshotWriter(obs.registry, stem + ".metrics.jsonl")
-    sched = Scheduler(engine, tiers=tiers, obs=obs)
+    sched = Scheduler(engine, tiers=tiers, obs=obs, slo=slo)
     for tier, pool in sorted(sched.pools.items()):
         print(f"== pool[{tier}]: {pool.n_slots} slots x {pool.max_len} "
               f"positions; {pool.bytes_per_token} B/token, "
@@ -271,6 +408,7 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None):
             reqs.append(sched.submit(Request(
                 prompt=prompts[i],
                 kv_policy=tiers[i % len(tiers)] if tiers else None,
+                priority=int(priorities[i]),
                 sampling=SamplingParams(temperature=args.temperature,
                                         max_new_tokens=args.max_new,
                                         seed=args.seed))))
@@ -286,13 +424,24 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None):
             time.sleep(min(float(arrivals[i]) - now, 0.01))
 
     assert all(r.is_finished for r in reqs)
-    print(f"\n{'req':>4} {'arrive':>7} {'tier':>5} {'P':>4} {'new':>4} "
-          f"{'ttft_s':>7} {'e2e_s':>7}  reason")
+    # accounting identity (DESIGN.md §16): every submitted request —
+    # including rejected/shed/faulted ones, which never emit a token —
+    # lands in exactly one finish reason
+    finish_reasons = dict(sched.metrics.finish_reasons)
+    assert sum(finish_reasons.values()) == len(reqs) == args.requests, \
+        (finish_reasons, len(reqs))
+    print(f"\n{'req':>4} {'arrive':>7} {'tier':>5} {'prio':>4} {'P':>4} "
+          f"{'new':>4} {'ttft_s':>7} {'e2e_s':>7}  reason")
     for a, r in zip(arrivals, reqs):
-        print(f"{r.id:>4} {a:>7.2f} {r.tier:>5} {r.prompt_len:>4} "
-              f"{r.n_generated:>4} "
-              f"{r.first_token_time - r.arrival_time:>7.3f} "
-              f"{r.finish_time - r.arrival_time:>7.3f}  {r.finish_reason}")
+        # rejected / deadline-shed / faulted requests may never have
+        # emitted a first token
+        ttft = (f"{r.first_token_time - r.arrival_time:>7.3f}"
+                if r.first_token_time is not None else f"{'-':>7}")
+        e2e = (f"{r.finish_time - r.arrival_time:>7.3f}"
+               if r.finish_time is not None else f"{'-':>7}")
+        print(f"{r.id:>4} {a:>7.2f} {r.tier:>5} {r.priority:>4} "
+              f"{r.prompt_len:>4} {r.n_generated:>4} {ttft} {e2e}  "
+              f"{r.finish_reason}")
 
     pool = sched.pool
     rep = sched.metrics.report()
@@ -307,6 +456,19 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None):
     # paged pool admits on pages actually needed (+ prefix sharing)
     rep["peak_in_flight_requests"] = peak_in_flight
     rep["paged"] = bool(args.paged)
+    # SLO / adversarial-workload stamp (DESIGN.md §16): workload shape +
+    # policy state, so committed overload points are self-describing
+    rep["n_submitted"] = len(reqs)
+    rep["arrival"] = args.arrival
+    if args.arrival == "bursty":
+        rep["burst_size"] = args.burst_size
+    rep["prompt_dist"] = args.prompt_dist
+    if args.priority_mix:
+        rep["priority_mix"] = args.priority_mix
+    if args.fault_rate:
+        rep["fault_rate"] = args.fault_rate
+    if slo is not None:
+        rep["slo"] = slo.snapshot()
     if args.paged:
         rep["page_size"] = pool.page_size
         rep["n_pages"] = sum(p.n_pages for p in sched.pools.values())
@@ -387,6 +549,52 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-warmup", action="store_true")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "bursty"],
+                    help="arrival process: smooth Poisson, or Poisson-"
+                         "spaced bursts of --burst-size simultaneous "
+                         "arrivals at the same long-run rate "
+                         "(DESIGN.md §16)")
+    ap.add_argument("--burst-size", type=int, default=4,
+                    help="arrivals per burst in --arrival bursty mode")
+    ap.add_argument("--prompt-dist", default="uniform",
+                    choices=["uniform", "heavy"],
+                    help="prompt-length law: uniform jitter, or 'heavy' "
+                         "(clipped Pareto: mostly short, heavy tail at "
+                         "--prompt-len)")
+    ap.add_argument("--priority-mix", default=None,
+                    help="seeded priority classes, e.g. '0:0.25,5:0.75' "
+                         "(class:weight; smaller = more important). "
+                         "Default: every request class 0 (pure FCFS)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="per-dispatch fault probability in the timed run "
+                         "(seeded; half killed dispatches, half NaN-"
+                         "poisoned tokens).  The scheduler recovers by "
+                         "preempt-and-requeue with bounded retries")
+    ap.add_argument("--max-fault-retries", type=int, default=3,
+                    help="step faults one request may survive before "
+                         "finish_reason='fault'")
+    ap.add_argument("--slo-max-waiting", type=int, default=None,
+                    help="SLO: reject unprotected arrivals once this many "
+                         "requests are queued")
+    ap.add_argument("--slo-max-queue-delay-s", type=float, default=None,
+                    help="SLO: reject unprotected arrivals once modeled "
+                         "queue drain exceeds this")
+    ap.add_argument("--slo-protect-priority", type=int, default=0,
+                    help="SLO: requests with priority <= this are never "
+                         "rejected")
+    ap.add_argument("--slo-downgrade", default=None, metavar="FROM:TO",
+                    help="SLO: kv-tier downgrade applied while degraded, "
+                         "e.g. bf16:int8 (needs --slo-high-s/--slo-low-s "
+                         "and --tiers naming both, so the target pool "
+                         "exists)")
+    ap.add_argument("--slo-high-s", type=float, default=None,
+                    help="SLO: modeled drain that ENGAGES tier downgrade")
+    ap.add_argument("--slo-low-s", type=float, default=None,
+                    help="SLO: modeled drain that RELEASES it (< high)")
+    ap.add_argument("--slo-max-step-s", type=float, default=None,
+                    help="SLO: modeled per-round latency budget sizing "
+                         "decode bursts / prefill chunks per step")
     ap.add_argument("--max-burst", type=int, default=8,
                     help="device-resident decode burst cap (1 = per-token "
                          "dispatch, DESIGN.md §11)")
@@ -489,8 +697,11 @@ def main():
 
     reports = []
     for kv_dtype in sweep:
-        engine = build_engine(args, cfg, params, kv_dtype, mesh, policy)
-        rep = run_point(args, cfg, engine, kv_dtype, tiers=tiers)
+        injector, arm_fault = build_fault_injector(args)
+        engine = build_engine(args, cfg, params, kv_dtype, mesh, policy,
+                              fault_injector=injector)
+        rep = run_point(args, cfg, engine, kv_dtype, tiers=tiers,
+                        arm_fault=arm_fault)
         label = "+".join(tiers) if tiers else kv_dtype
         print(f"\n== serving metrics [{label}]")
         print(json.dumps(rep, indent=2))
@@ -499,7 +710,8 @@ def main():
             path = os.path.join(
                 args.out_dir,
                 point_label(cfg, kv_dtype, tiers, args.max_burst,
-                            args.weight_kernel, args.paged) + ".json")
+                            args.weight_kernel, args.paged,
+                            args=args) + ".json")
             with open(path, "w") as f:
                 json.dump(rep, f, indent=2, allow_nan=False)
             print(f"== wrote {path}")

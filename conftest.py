@@ -13,6 +13,20 @@ import pytest  # noqa: E402
 
 
 @pytest.fixture(autouse=True)
+def _reset_kernel_execution_declaration():
+    """``kernels.ops`` holds a process-global execution declaration, and
+    engines with ``kernel='auto'`` deliberately inherit whatever a driver
+    pinned — correct within one serving process, but across tests it means
+    whichever test last declared ``kernel='pallas'`` (e.g. a meshless
+    pallas baseline) silently flips every later auto-policy engine to the
+    pallas path.  Reset to the defaults before each test so kernel-mode
+    behaviour is collection-order-independent."""
+    from repro.kernels.ops import reset_execution
+    reset_execution()
+    yield
+
+
+@pytest.fixture(autouse=True)
 def _reset_kernel_site_warnings():
     """Kernel fallback warnings fire once per SITE per process
     (``kernels/ops.py`` site registry) — without a per-test reset, whichever

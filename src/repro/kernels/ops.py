@@ -91,6 +91,17 @@ def declare_execution(*, kernel: Optional[str] = None,
         _WSPECS["map"] = weight_specs
 
 
+def reset_execution() -> None:
+    """Restore the default execution declaration (mode 'auto', no mesh,
+    no weight specs).  A process-level driver pin (e.g. a test that
+    declared ``kernel='pallas'``) otherwise outlives its owner — any
+    later 'auto'-policy engine in the same process would silently inherit
+    it.  The test suite resets around every test (conftest autouse) so
+    kernel-mode assertions are collection-order-independent."""
+    _EXEC.update(mode="auto", mesh=None, partitioned=False)
+    _WSPECS["map"] = None
+
+
 def kernel_mode() -> str:
     return _EXEC["mode"]
 

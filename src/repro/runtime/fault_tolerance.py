@@ -15,13 +15,70 @@ latest checkpoint, possibly on a different topology), (c) stragglers
     failures it resumes from the latest checkpoint; combined with the
     elastic loader in checkpoint/store.py this also covers mesh-shape
     changes across restarts.
+
+Serving-side fault tolerance (DESIGN.md §16) reuses the same module:
+
+  * ``StepFault``   — the typed failure a serving dispatch raises when a
+    step dies or returns poisoned output (lost shard, NaN logits, an
+    injected test fault).  The scheduler catches it on the hot path and
+    recovers by preempt-and-requeue instead of process death.
+  * ``RetryBudget`` — per-key bounded retry with exponential backoff:
+    each fault on a key grants a backoff (1, 2, 4, ... steps) until the
+    key's budget is exhausted, at which point the caller retires the
+    work permanently.  Keys are whatever identifies the retried unit
+    (request ids, in serving).
 """
 from __future__ import annotations
 
 import dataclasses
 import signal
 import time
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
+
+
+class StepFault(RuntimeError):
+    """A single engine dispatch failed or produced poisoned output.
+
+    ``kind``: 'injected' (test hook), 'nan' (non-finite / out-of-range
+    step output), 'shard' (device/shard loss surfaced by the runtime), or
+    any runtime-specific tag.  Raised by the engine's step primitives and
+    caught by the serving scheduler, which invalidates the affected slots
+    and requeues their requests (re-prefill is cheap via the paged prefix
+    cache) instead of letting the process die.
+    """
+
+    def __init__(self, kind: str, detail: str = ""):
+        super().__init__(f"step fault [{kind}]{': ' + detail if detail else ''}")
+        self.kind = kind
+        self.detail = detail
+
+
+class RetryBudget:
+    """Bounded retry-and-backoff bookkeeping, keyed by work unit.
+
+    ``record_fault(key)`` returns the number of steps the caller should
+    hold the key back before retrying (exponential: 1, 2, 4, ...), or
+    ``None`` once the key has exhausted ``max_retries`` — the caller then
+    retires the unit permanently.  ``clear(key)`` forgets a key's history
+    (call it when the unit completes, so ids can be reused)."""
+
+    def __init__(self, max_retries: int = 3):
+        assert max_retries >= 0
+        self.max_retries = max_retries
+        self.faults: Dict = {}
+
+    def record_fault(self, key) -> Optional[int]:
+        n = self.faults.get(key, 0) + 1
+        self.faults[key] = n
+        if n > self.max_retries:
+            return None
+        return 1 << (n - 1)
+
+    def n_faults(self, key) -> int:
+        return self.faults.get(key, 0)
+
+    def clear(self, key) -> None:
+        self.faults.pop(key, None)
 
 
 class PreemptionHandler:

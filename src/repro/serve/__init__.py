@@ -1,4 +1,5 @@
 from repro.quant.policy import PrecisionPolicy
+from repro.runtime.fault_tolerance import RetryBudget, StepFault
 
 from .engine import SCHEDULABLE_FAMILIES, ServeConfig, ServingEngine
 from .kv_pool import (KVCachePool, PageAllocator, PagedKVPool,
@@ -7,11 +8,13 @@ from .kv_pool import (KVCachePool, PageAllocator, PagedKVPool,
 from .metrics import ServeMetrics
 from .request import Request, RequestState, SamplingParams
 from .scheduler import Scheduler
+from .slo import Rejection, SLOPolicy
 
 __all__ = [
     "KVCachePool", "PageAllocator", "PagedKVPool", "PrecisionPolicy",
-    "Request", "RequestState", "SamplingParams", "SCHEDULABLE_FAMILIES",
-    "Scheduler", "ServeConfig", "ServeMetrics", "ServingEngine",
+    "Rejection", "Request", "RequestState", "RetryBudget",
+    "SamplingParams", "SCHEDULABLE_FAMILIES", "Scheduler", "ServeConfig",
+    "ServeMetrics", "ServingEngine", "SLOPolicy", "StepFault",
     "bytes_per_page", "bytes_per_slot", "pages_for_budget",
     "slots_for_budget",
 ]

@@ -79,6 +79,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models import transformer as T
 from repro.models.common import QLinear
 from repro.quant.policy import PrecisionPolicy, validate_kv_tier
+from repro.runtime.fault_tolerance import StepFault
 
 from .kv_pool import (KVCachePool, PagedKVPool, POOLABLE_FAMILIES,
                       pages_for_budget, slots_for_budget)
@@ -126,6 +127,20 @@ class ServeConfig:
     # default KV tier and kernel dispatch as ONE declarative object.  None
     # derives a policy from the legacy knobs above.
     policy: Optional[PrecisionPolicy] = None
+    # fault-injection hook (DESIGN.md §16): a callable
+    # ``(kind, seq) -> Optional[str]`` consulted once per engine dispatch
+    # (kind in {'prefill', 'decode', 'burst'}; ``seq`` is the engine's
+    # monotone dispatch counter, so a test or bench can kill step #7
+    # deterministically).  Return None for no fault; 'nan' to poison the
+    # dispatch's sampled tokens (exercises the scheduler's poisoned-output
+    # detector); any other string to raise ``StepFault(tag)`` in place of
+    # the dispatch (lost shard / failed launch).  None disables the hook
+    # at zero cost.
+    fault_injector: Any = None
+    # bounded retry: how many step faults one request may survive (each
+    # costs a preempt-and-requeue with exponential backoff) before the
+    # scheduler retires it with finish_reason='fault'
+    max_fault_retries: int = 3
 
     def __post_init__(self):
         pol = self.policy
@@ -181,6 +196,11 @@ class ServingEngine:
         self._plan = self.policy.resolved_plan(cfg)
         self._param_shardings = None
         self._sharded_steps: Dict = {}   # (n_slots, capacity, tier) -> jits
+        # monotone dispatch counter consulted by the fault-injection hook
+        # (DESIGN.md §16) — advances only when an injector is armed, so
+        # the disabled path costs nothing and dispatch numbering is
+        # deterministic for a given workload
+        self._fault_seq = 0
 
         # The execution policy (kernel mode + mesh + per-leaf kernel
         # sharding specs) is declared before every step call (not just
@@ -587,6 +607,23 @@ class ServingEngine:
             pool.place(self.pool_shardings(pool))
         return pool
 
+    def _inject_fault(self, kind: str) -> Optional[str]:
+        """Consult the fault-injection hook for one dispatch.  Returns
+        'nan' when the dispatch's output should be poisoned (decode paths
+        only — the caller corrupts the sampled ids so the scheduler's
+        poisoned-output detector fires), raises ``StepFault`` for a
+        killed dispatch, and returns None on the no-fault path."""
+        fi = self.scfg.fault_injector
+        if fi is None:
+            return None
+        self._fault_seq += 1
+        mode = fi(kind, self._fault_seq)
+        if not mode:
+            return None
+        if mode == "nan" and kind != "prefill":
+            return "nan"
+        raise StepFault(str(mode), f"{kind} dispatch #{self._fault_seq}")
+
     def pad_prompt(self, prompt: np.ndarray):
         """Prefill pre-pass: ONE int32 conversion + zero-pad to a whole
         number of prefill chunks.  Returns (padded [ceil(P/C)*C], P).  The
@@ -603,7 +640,8 @@ class ServingEngine:
 
     def prefill_chunk_into_slot(self, pool: KVCachePool, slot: int,
                                 prompt: np.ndarray, offset: int, *,
-                                prompt_len: Optional[int] = None):
+                                prompt_len: Optional[int] = None,
+                                need_logits: bool = True):
         """Write prompt[offset : offset+C] into ``slot``.  For the prompt's
         final chunk, returns the [C, V] chunk logits (pad positions carry
         garbage — callers index the true last position); earlier chunks
@@ -613,6 +651,10 @@ class ServingEngine:
         With ``prompt_len`` given, ``prompt`` must already be the
         chunk-padded buffer from ``pad_prompt`` (the scheduler pads once at
         admission); without it, the legacy raw-prompt interface pads here.
+        ``need_logits=False`` skips the lm-head even on the final chunk
+        (the preempt-resume replay path: those tokens' next-token samples
+        were already delivered, only their KV must be recomputed) — it
+        reuses the non-final chunk's compiled variant, so no extra jit.
         """
         C = self.scfg.prefill_chunk
         if prompt_len is None:
@@ -621,7 +663,8 @@ class ServingEngine:
         assert n > 0, (offset, prompt_len)
         assert offset + n <= pool.max_len, "prompt exceeds slot capacity"
         chunk = prompt[offset:offset + C][None]       # view, no allocation
-        final = offset + n >= prompt_len
+        final = (offset + n >= prompt_len) and need_logits
+        self._inject_fault("prefill")
         prefill_chunk = self._steps_for(pool)[0]
         if getattr(pool, "paged", False):
             # pin the chunk's write window (fresh pages / COW of a shared
@@ -669,6 +712,7 @@ class ServingEngine:
             keys = np.zeros((n, 2), np.uint32)
         if temperatures is None:
             temperatures = np.zeros((n,), np.float32)
+        poison = self._inject_fault("decode")
         decode_slots = self._steps_for(pool)[1]
         step_args = (self.params, jnp.asarray(tokens), pool.cache,
                      jnp.asarray(pool.lengths), jnp.asarray(keys, jnp.uint32),
@@ -680,7 +724,13 @@ class ServingEngine:
             # page through their unmapped (entry-0) table slots.
             step_args += (jnp.asarray(pool.page_table),)
         toks, pool.cache = decode_slots(*step_args)
-        return np.asarray(toks)
+        toks = np.asarray(toks)
+        if poison is not None:
+            # poisoned-output simulation: out-of-vocab ids, as a NaN-
+            # saturated sampler would produce — the scheduler's validity
+            # guard (not this return path) is what must catch them
+            toks = np.full_like(toks, -1)
+        return toks
 
     def decode_slots_with_logits(self, pool: KVCachePool,
                                  tokens: np.ndarray) -> np.ndarray:
@@ -716,6 +766,7 @@ class ServingEngine:
         K, n = key_schedule.shape[0], pool.n_slots
         assert key_schedule.shape == (K, n, 2), key_schedule.shape
         tokens = np.asarray(tokens, np.int32).reshape(n)
+        poison = self._inject_fault("burst")
         decode_burst = self._steps_for(pool)[3]
         step_args = (
             self.params, pool.cache, jnp.asarray(tokens),
@@ -731,6 +782,8 @@ class ServingEngine:
         pool.cache, toks, valid = decode_burst(*step_args)
         toks = np.asarray(toks)                       # the burst's one sync
         valid = np.asarray(valid)
+        if poison is not None:
+            toks = np.full_like(toks, -1)
         pool.lengths += valid.sum(axis=0).astype(np.int32)
         return toks, valid
 

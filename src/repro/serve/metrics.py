@@ -31,6 +31,20 @@ each burst's wall time uniformly across the tokens it emitted (grouped by
 the per-token dispatch ids the scheduler records), which is the
 defensible per-token percentile when bursts ran.
 
+**SLO accounting** (DESIGN.md §16): every submitted request retires with
+exactly one finish reason — the generation reasons (eos / length /
+capacity) plus the shed reasons (rejected / deadline_exceeded / fault) —
+so ``finish_reasons`` sums to ``n_requests``: nothing disappears under
+overload (``preempted_resumed`` in the same dict is an *overlay*: finished
+requests that survived >= 1 preemption; it is not part of the sum).
+TTFT / ITL / e2e samples come only from requests that actually delivered
+a first token — shed requests never pollute the latency percentiles and
+are visible in the reasons map and the rejection/preemption/fault
+counters instead.  Queue waits are ``admit - last enqueue`` per priority
+class (a preempted request's second wait is charged to its requeue), and
+per-priority TTFT/e2e percentiles appear whenever more than one class
+was served — the quantity the SLO bench's bounded-p99 claim is made on.
+
 **Registry consumption** (DESIGN.md §13): with a
 ``repro.obs.MetricsRegistry`` attached, every event hook additionally
 publishes into shared counter/histogram families — ``ServeMetrics`` is a
@@ -109,7 +123,23 @@ class ServeMetrics:
         self.itl_spread: List[float] = []     # burst-spread ITL estimate
         self.e2e: List[float] = []            # per-request total latency
         self.n_requests = 0
+        self.n_arrived = 0
         self.total_new_tokens = 0
+        # --- SLO accounting (DESIGN.md §16) ---
+        self.finish_reasons: Dict[str, int] = {}   # disjoint; sums to n_requests
+        self.n_resumed = 0            # finished after >= 1 preemption
+        self.n_preemptions = 0
+        self.preempt_reasons: Dict[str, int] = {}  # 'priority' | 'fault'
+        self.n_rejections = 0
+        self.rejection_kinds: Dict[str, int] = {}
+        self.n_downgrades = 0
+        self.n_fault_events = 0       # faulted dispatches
+        self.n_fault_requests = 0     # request-slots those dispatches hit
+        self.fault_kinds: Dict[str, int] = {}
+        # queue wait (admit - last enqueue) and TTFT/e2e, per priority class
+        self.queue_wait: Dict[int, List[float]] = {}
+        self._prio_ttft: Dict[int, List[float]] = {}
+        self._prio_e2e: Dict[int, List[float]] = {}
         self.first_arrival: Optional[float] = None
         self.last_finish: Optional[float] = None
         # time-weighted occupancy integrals (total, and per tier when the
@@ -146,13 +176,83 @@ class ServeMetrics:
                 "serve_ttft_seconds", "time to first token")
             self._r_e2e = registry.histogram(
                 "serve_e2e_seconds", "request arrival -> retirement")
+            self._r_preempt = registry.counter(
+                "serve_preemptions_total",
+                "decode slots evicted and requeued, by reason and KV tier")
+            self._r_reject = registry.counter(
+                "serve_rejections_total",
+                "requests shed at admission, by verdict kind")
+            self._r_downgrade = registry.counter(
+                "serve_downgrades_total",
+                "KV-tier downgrades under pressure, by from/to tier")
+            self._r_fault = registry.counter(
+                "serve_faults_total", "faulted dispatches, by fault kind")
+            self._r_qwait = registry.histogram(
+                "serve_queue_wait_seconds",
+                "enqueue -> admission wait, by priority class")
 
     # -- event hooks (called by the scheduler) -----------------------------
     def on_arrival(self, now: float) -> None:
+        self.n_arrived += 1
         if self.first_arrival is None:
             self.first_arrival = now
         if self._reg is not None:
             self._r_arrived.inc()
+
+    def on_admit(self, req) -> None:
+        """WAITING -> PREFILL: record the queue wait this admission ended,
+        charged to the request's most recent enqueue (submit or a
+        preemption requeue) and its priority class."""
+        if req.admit_time is None:
+            return
+        t0 = req.last_enqueue_time if req.last_enqueue_time is not None \
+            else req.arrival_time
+        if t0 is None:
+            return
+        wait = max(req.admit_time - t0, 0.0)
+        prio = getattr(req, "priority", 0)
+        self.queue_wait.setdefault(prio, []).append(wait)
+        if self._reg is not None:
+            self._r_qwait.observe(wait, priority=str(prio))
+
+    def on_preempt(self, req, reason: str = "priority") -> None:
+        """A DECODE (or mid-prefill) slot was evicted and requeued —
+        either for a higher-priority waiter ('priority') or because a
+        faulted dispatch invalidated it ('fault')."""
+        self.n_preemptions += 1
+        self.preempt_reasons[reason] = \
+            self.preempt_reasons.get(reason, 0) + 1
+        if self._reg is not None:
+            self._r_preempt.inc(reason=reason,
+                                tier=getattr(req, "tier", None) or "")
+
+    def on_reject(self, req) -> None:
+        """Admission control shed the request at submit (typed verdict in
+        ``req.rejection``); it retires with finish_reason='rejected'."""
+        kind = getattr(req.rejection, "kind", None) or "unknown"
+        self.n_rejections += 1
+        self.rejection_kinds[kind] = self.rejection_kinds.get(kind, 0) + 1
+        if self._reg is not None:
+            self._r_reject.inc(kind=kind)
+
+    def on_downgrade(self, req) -> None:
+        """The SLO policy served the request at a denser KV tier than it
+        asked for (``req.downgraded_from`` -> ``req.tier``)."""
+        self.n_downgrades += 1
+        if self._reg is not None:
+            self._r_downgrade.inc(
+                src=getattr(req, "downgraded_from", None) or "",
+                dst=getattr(req, "tier", None) or "")
+
+    def on_fault(self, fault, n_requests: int) -> None:
+        """One engine dispatch faulted (raised or returned poisoned
+        output), invalidating ``n_requests`` slots."""
+        self.n_fault_events += 1
+        self.n_fault_requests += n_requests
+        kind = getattr(fault, "kind", None) or "unknown"
+        self.fault_kinds[kind] = self.fault_kinds.get(kind, 0) + 1
+        if self._reg is not None:
+            self._r_fault.inc(kind=kind)
 
     def on_step(self, now: float,
                 used_slots: Union[int, Mapping[str, int]]) -> None:
@@ -198,20 +298,31 @@ class ServeMetrics:
         self.n_requests += 1
         self.total_new_tokens += req.n_generated
         self.last_finish = req.finish_time
+        reason = req.finish_reason or "unknown"
+        self.finish_reasons[reason] = self.finish_reasons.get(reason, 0) + 1
+        if getattr(req, "n_preemptions", 0) > 0:
+            self.n_resumed += 1
+        prio = getattr(req, "priority", 0)
         ttft = e2e = None
         hit_tokens = getattr(req, "prefix_hit_tokens", 0)
-        if hit_tokens > 0:
-            self.prefix_hits += 1
-            self.prefix_hit_tokens += hit_tokens
-        else:
-            self.prefix_misses += 1
+        # latency/prefix samples only from requests that DELIVERED — a
+        # request shed before its first token (rejected, deadline, fault
+        # during prefill) is visible in finish_reasons and the shed
+        # counters, never in the percentiles it would drag to zero
         if req.first_token_time is not None and req.arrival_time is not None:
+            if hit_tokens > 0:
+                self.prefix_hits += 1
+                self.prefix_hit_tokens += hit_tokens
+            else:
+                self.prefix_misses += 1
             ttft = req.first_token_time - req.arrival_time
             self.ttft.append(ttft)
             (self.ttft_hit if hit_tokens > 0 else self.ttft_miss).append(ttft)
-        if req.finish_time is not None and req.arrival_time is not None:
-            e2e = req.finish_time - req.arrival_time
-            self.e2e.append(e2e)
+            self._prio_ttft.setdefault(prio, []).append(ttft)
+            if req.finish_time is not None:
+                e2e = req.finish_time - req.arrival_time
+                self.e2e.append(e2e)
+                self._prio_e2e.setdefault(prio, []).append(e2e)
         if len(req.token_times) > 1:
             self.itl.extend(np.diff(np.asarray(req.token_times)).tolist())
             self.itl_spread.extend(burst_spread_itl(
@@ -294,4 +405,49 @@ class ServeMetrics:
             out["itl_burst_spread_mean_s"] = round(float(np.mean(xs)), 4)
             out["itl_burst_spread_p50_s"] = round(_pct(xs, 50), 4)
             out["itl_burst_spread_p95_s"] = round(_pct(xs, 95), 4)
+        # --- SLO accounting (DESIGN.md §16) ---
+        if self.finish_reasons:
+            # disjoint reasons sum to n_requests; 'preempted_resumed' is
+            # an overlay (finished after >= 1 preemption), not a term
+            fr = dict(sorted(self.finish_reasons.items()))
+            if self.n_resumed:
+                fr["preempted_resumed"] = self.n_resumed
+            out["finish_reasons"] = fr
+        if self.queue_wait:
+            out["queue_wait_p50_s"] = {
+                str(p): round(_pct(xs, 50), 4)
+                for p, xs in sorted(self.queue_wait.items())}
+            out["queue_wait_p95_s"] = {
+                str(p): round(_pct(xs, 95), 4)
+                for p, xs in sorted(self.queue_wait.items())}
+        if self.n_preemptions:
+            out["preemptions"] = self.n_preemptions
+            out["preempt_reasons"] = dict(sorted(
+                self.preempt_reasons.items()))
+        if self.n_rejections:
+            out["rejections"] = self.n_rejections
+            out["rejection_kinds"] = dict(sorted(
+                self.rejection_kinds.items()))
+        if self.n_downgrades:
+            out["downgrades"] = self.n_downgrades
+        if self.n_fault_events:
+            out["faults"] = self.n_fault_events
+            out["fault_requests"] = self.n_fault_requests
+            out["fault_kinds"] = dict(sorted(self.fault_kinds.items()))
+        classes = set(self._prio_ttft) | set(self._prio_e2e)
+        if len(classes) > 1:
+            # the bounded-p99 claim is per class — one overloaded run's
+            # aggregate percentiles hide exactly the split that matters
+            per: Dict[str, Dict] = {}
+            for p in sorted(classes):
+                d: Dict = {}
+                for name, xs in (("ttft", self._prio_ttft.get(p)),
+                                 ("e2e", self._prio_e2e.get(p))):
+                    if xs:
+                        d[f"{name}_p50_s"] = round(_pct(xs, 50), 4)
+                        d[f"{name}_p95_s"] = round(_pct(xs, 95), 4)
+                        d[f"{name}_p99_s"] = round(_pct(xs, 99), 4)
+                        d[f"n_{name}"] = len(xs)
+                per[str(p)] = d
+            out["per_priority"] = per
         return out

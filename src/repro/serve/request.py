@@ -59,6 +59,19 @@ class Request:
     # perturb this request's continuation.
     kv_policy: Optional[str] = None
     tier: Optional[str] = None               # resolved at submit()
+    # scheduling class (DESIGN.md §16): smaller = more important; 0 is the
+    # highest class.  Admission scans priority-then-arrival order, and
+    # under slot/page pressure the scheduler may preempt the lowest-
+    # priority DECODE slot to admit a higher-priority waiter.  Priority
+    # never changes a request's tokens — only when they are produced.
+    priority: int = 0
+    # optional SLO deadlines, in scheduler-clock seconds from arrival.  A
+    # request still WAITING past its TTFT deadline, or still running past
+    # its e2e deadline, is shed with finish_reason='deadline_exceeded'
+    # (step-granular: enforced from the scheduler's once-per-step clock
+    # sample, so the disabled-obs zero-extra-clock-calls contract holds).
+    ttft_deadline_s: Optional[float] = None
+    e2e_deadline_s: Optional[float] = None
     slot: Optional[int] = None               # KV pool slot while admitted
     prefill_pos: int = 0                     # prompt positions in cache
     # prompt tokens adopted from the paged pool's prefix cache at
@@ -70,7 +83,35 @@ class Request:
     # allocating per chunk
     prompt_padded: Optional[np.ndarray] = None
     output_tokens: List[int] = dataclasses.field(default_factory=list)
-    finish_reason: Optional[str] = None      # eos | length | capacity
+    # --- preemption / fault-recovery state (DESIGN.md §16) ---
+    # set when the request lost its slot mid-decode (preempted for a
+    # higher-priority waiter, or invalidated by a step fault): the tokens
+    # whose KV must be recomputed on re-admission — the original prompt
+    # plus every generated token except the last (the last emitted token
+    # is the next decode INPUT; its KV has not been written yet).  The
+    # prefill loop serves ``resume_prompt`` instead of ``prompt``, emits
+    # nothing at its final chunk (those tokens were already delivered),
+    # and decode continues at the preserved ``n_generated`` — which, with
+    # the per-(request, step) key schedule, makes the resumed output
+    # bit-identical to an unpreempted run.
+    resume_prompt: Optional[np.ndarray] = None
+    n_preemptions: int = 0                   # scheduler preempt-and-requeues
+    n_faults: int = 0                        # step faults charged to this req
+    # earliest scheduler step() index at which a fault-requeued request may
+    # be re-admitted (exponential backoff; 0 = immediately)
+    hold_until_step: int = 0
+    # most recent WAITING-queue entry (submit or requeue) — queue-wait
+    # samples are admit - last_enqueue, so a preempted request's second
+    # wait is charged to the requeue, not its original arrival
+    last_enqueue_time: Optional[float] = None
+    # typed admission-control verdict when the SLO policy sheds the
+    # request at submit (serve.slo.Rejection); finish_reason='rejected'
+    rejection: Optional[object] = None
+    # KV tier the SLO policy downgraded this request from (None = served
+    # at the tier it asked for)
+    downgraded_from: Optional[str] = None
+    finish_reason: Optional[str] = None
+    # ^ eos | length | capacity | rejected | deadline_exceeded | fault
     # --- timing (scheduler clock; see metrics.py) ---
     arrival_time: Optional[float] = None
     # when the request left WAITING (KV slot allocated).  Only stamped
@@ -93,6 +134,22 @@ class Request:
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.size)
+
+    @property
+    def prefill_tokens(self) -> np.ndarray:
+        """What the prefill loop must commit to the cache: the original
+        prompt, or the resume buffer (prompt + replayed generated tokens)
+        after a preemption."""
+        return self.prompt if self.resume_prompt is None else \
+            self.resume_prompt
+
+    @property
+    def prefill_len(self) -> int:
+        return int(self.prefill_tokens.size)
+
+    @property
+    def is_resuming(self) -> bool:
+        return self.resume_prompt is not None
 
     @property
     def n_generated(self) -> int:

@@ -55,15 +55,44 @@ clock, so two virtual-clock runs produce byte-identical trace files.
 ``obs=None`` (default) is a strict no-op: zero extra clock calls, zero
 extra host syncs, zero extra dispatches (pinned by tests/test_obs.py).
 
+**SLO-aware scheduling** (DESIGN.md §16): requests carry a priority class
+(smaller = more important) and optional TTFT / e2e deadlines.  Admission
+scans the queue in priority-then-arrival order (stable: with one class it
+IS the FCFS scan), and when a waiter cannot be admitted the scheduler may
+**preempt** the lowest-priority DECODE slot of its tier: the victim's
+slot is freed (on a paged pool its registered prompt pages stay alive in
+the prefix cache), and the victim is requeued with a ``resume_prompt`` —
+prompt + all generated tokens but the last.  Re-admission re-prefills
+only the tail past the prefix hit, emits nothing for the replayed tokens,
+and decode continues at the preserved ``n_generated`` — so, with the
+per-(request, step) key schedule, a preempted-then-resumed request's
+output is bit-identical to an unpreempted run (pinned in
+tests/test_slo_serving.py for slab and paged pools, single-device and
+dp x tp).  ``Scheduler(engine, slo=...)`` attaches a ``serve.slo.SLOPolicy``
+for admission control (typed rejections), KV-tier downgrade with
+hysteresis, and cost-model burst/chunk planning.  Deadlines are enforced
+step-granularly from the clock sample each round already takes.
+
+**Fault tolerance** (DESIGN.md §16): every engine dispatch is fenced — a
+``StepFault`` (killed dispatch, lost shard, or the ``ServeConfig
+(fault_injector=...)`` test hook) or poisoned decode output (sampled ids
+outside the vocabulary) invalidates the affected slots and requeues their
+requests through the same preempt-and-resume path, with bounded
+retry-and-backoff (``ServeConfig.max_fault_retries``, exponential hold in
+scheduler steps) instead of process death.  A request that exhausts its
+budget retires with ``finish_reason='fault'``.  Because a faulted
+dispatch's outputs are dropped whole and recovery replays from the KV
+recompute, fault recovery preserves the bit-identity contract.
+
 Determinism: sampling keys are per (request, step) — see request.py — and
 row computations are independent of batch composition (dense ops are
 row-wise; MoE decode routes each row as its own drop-free single-token
 group), so a request's greedy output is identical whether it was served
 alone, in a full one-shot batch, admitted mid-flight next to strangers,
-advanced K tokens at a time inside a burst, or cohorted beside other
-tiers.  The clock is injectable for metric tests.  Burst timing caveat:
-all K tokens of a burst surface at burst end, so their ``token_times``
-are burst-granular (see metrics.py).
+advanced K tokens at a time inside a burst, cohorted beside other tiers,
+or preempted and resumed.  The clock is injectable for metric tests.
+Burst timing caveat: all K tokens of a burst surface at burst end, so
+their ``token_times`` are burst-granular (see metrics.py).
 """
 from __future__ import annotations
 
@@ -75,6 +104,7 @@ from typing import Callable, Deque, Dict, List, Mapping, Optional, Sequence, \
 import numpy as np
 
 from repro.obs.trace import PID_REQUESTS, PID_SCHEDULER
+from repro.runtime.fault_tolerance import RetryBudget, StepFault
 
 from .kv_pool import KVCachePool
 from .metrics import ServeMetrics
@@ -89,7 +119,7 @@ class Scheduler:
                  max_burst: Optional[int] = None,
                  tiers: Union[None, Sequence[str],
                               Mapping[str, Optional[int]]] = None,
-                 obs=None):
+                 obs=None, slo=None):
         """``tiers``: KV tiers this scheduler serves — a sequence of tier
         names (each pool sized by the engine's ServeConfig: explicit
         ``n_slots`` or budget-derived per tier) or a {tier: n_slots}
@@ -98,7 +128,10 @@ class Scheduler:
         pre-built pool instead (mutually exclusive with ``tiers``).
         ``obs``: a ``repro.obs.Observability`` bundle (tracer / registry /
         profiler / snapshot writer, each optional); None disables all of
-        it at zero cost."""
+        it at zero cost.  ``slo``: a ``serve.slo.SLOPolicy`` — admission
+        control, KV-tier downgrade with hysteresis, and cost-model burst/
+        chunk planning (DESIGN.md §16); None keeps the policy-free
+        admit-everything scheduler."""
         self.engine = engine
         if pool is not None and tiers is not None:
             raise ValueError("give either pool= or tiers=, not both")
@@ -141,6 +174,19 @@ class Scheduler:
         self.waiting: Deque[Request] = deque()
         self.running: Dict[Tuple[str, int], Request] = {}  # (tier, slot)
         self.finished: List[Request] = []
+        self.slo = slo
+        # fault tolerance (DESIGN.md §16): bounded per-request retry with
+        # exponential backoff; the poisoned-output guard (sampled ids in
+        # [0, vocab)) is armed only when a fault injector is — a real
+        # deployment would arm an isfinite guard the same way
+        self._retry = RetryBudget(
+            getattr(engine.scfg, "max_fault_retries", 3))
+        self._ft_check = getattr(engine.scfg, "fault_injector",
+                                 None) is not None
+        # freshest known clock sample (stamped once per step and at every
+        # submit) — deadline shedding reads THIS instead of taking extra
+        # clock calls, keeping the obs-disabled zero-extra-calls contract
+        self._last_now: Optional[float] = None
         self.obs = obs
         self.tracer = obs.tracer if obs is not None else None
         self.profiler = obs.profiler if obs is not None else None
@@ -233,10 +279,9 @@ class Scheduler:
         return self.metrics.decode_dispatches
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> Request:
-        """FCFS enqueue.  Resolves the request's KV tier and validates —
-        eagerly, with an actionable message — that the tier is served and
-        the request fits a slot of that tier end-to-end."""
+    def _resolve_tier(self, req: Request) -> KVCachePool:
+        """Resolve and validate the request's KV tier (eagerly, with an
+        actionable message) and its end-to-end slot fit."""
         tier = self.default_tier if req.kv_policy is None else req.kv_policy
         if tier not in self.pools:
             raise ValueError(
@@ -252,13 +297,41 @@ class Scheduler:
                 f"(prompt {req.prompt_len} + max_new "
                 f"{req.sampling.max_new_tokens}) > slot capacity "
                 f"{pool.max_len}")
+        return pool
+
+    def submit(self, req: Request) -> Request:
+        """Enqueue (priority-then-arrival order is applied at admission;
+        with one priority class this is exactly FCFS).  With an SLO
+        policy attached, the request may be DOWNGRADED to a denser KV
+        tier (``req.downgraded_from`` records the original) or shed with
+        a typed verdict: it comes back FINISHED with
+        ``finish_reason='rejected'`` and ``req.rejection`` set, and is
+        never enqueued — callers must check ``is_finished`` when serving
+        under a policy."""
+        self._resolve_tier(req)
         if req.id is None:
             req.id = self._next_id
         self._next_id = max(self._next_id, req.id) + 1
         req.state = RequestState.WAITING
         req.arrival_time = self._clock()
-        self.waiting.append(req)
+        self._last_now = req.arrival_time
+        req.last_enqueue_time = req.arrival_time
         self.metrics.on_arrival(req.arrival_time)
+        if self.slo is not None:
+            verdict = self.slo.admit(req, self)
+            if req.downgraded_from is not None \
+                    and req.tier != req.kv_policy:
+                # the policy downgraded the tier in place — re-resolve
+                # (and re-validate the fit at the denser tier)
+                self._resolve_tier(req)
+                self.metrics.on_downgrade(req)
+            if verdict is not None:
+                req.rejection = verdict
+                self.metrics.on_reject(req)
+                self._finish_unadmitted(req, "rejected",
+                                        req.arrival_time, None)
+                return req
+        self.waiting.append(req)
         return req
 
     @property
@@ -292,6 +365,10 @@ class Scheduler:
                for r in self.running.values()):
             return 1
         k = self.max_burst
+        if self.slo is not None:
+            # cost-model cap: largest K whose modeled wall fits the
+            # policy's per-round latency budget (DESIGN.md §16)
+            k = self.slo.burst_cap(self, dec, pool, k)
         for r in dec:
             budget = r.sampling.max_new_tokens - r.n_generated
             capacity = pool.max_len - int(pool.lengths[r.slot]) - 1
@@ -305,102 +382,55 @@ class Scheduler:
         emitted: List = []
         finished_now: List[Request] = []
 
-        # 1. admission: arrival-order scan; a request is admitted when its
-        # tier's pool has a free slot (single tier: head-of-queue FCFS).
-        # The scan stops as soon as every pool is full — a backlogged
-        # queue costs O(1) per step, not a full deque rotation
-        free_total = sum(p.n_free for p in self.pools.values())
-        if free_total and self.waiting:
-            still: Deque[Request] = deque()
-            while self.waiting:
-                if free_total == 0:
-                    still.extend(self.waiting)
-                    self.waiting.clear()
-                    break
-                req = self.waiting.popleft()
-                pool = self.pools[req.tier]
-                if getattr(pool, "paged", False):
-                    # paged admission (DESIGN.md §15): a slot AND enough
-                    # arena pages for the request's worst-case growth; a
-                    # prefix-cache hit adopts shared pages and resumes
-                    # prefill past them (full-cover hits re-run only the
-                    # final chunk for its first-token logits)
-                    adm = pool.admit(req.prompt,
-                                     req.sampling.max_new_tokens)
-                    if adm is None:
-                        still.append(req)
-                        continue
-                    req.slot, req.prefill_pos, req.prefix_hit_tokens = adm
-                    if self._r_hits is not None \
-                            and req.prefix_hit_tokens > 0:
-                        self._r_hits.inc(tier=req.tier)
-                        self._r_hit_tokens.inc(req.prefix_hit_tokens,
-                                               tier=req.tier)
-                else:
-                    if not pool.n_free:
-                        still.append(req)
-                        continue
-                    req.slot = pool.alloc()
-                    req.prefill_pos = 0
-                free_total -= 1
-                req.state = RequestState.PREFILL
-                # one-time prompt pre-pass: int32 + chunk padding hoisted
-                # out of the per-chunk loop (engine slices views from it)
-                if req.prompt_padded is None:
-                    req.prompt_padded, _ = self.engine.pad_prompt(req.prompt)
-                self.running[(req.tier, req.slot)] = req
-                # admit stamp feeds the WAITING span; gated so the
-                # disabled path makes zero extra clock calls
-                if self.tracer is not None:
-                    req.admit_time = self._clock()
-                if self._r_adm is not None:
-                    self._r_adm.inc(tier=req.tier)
-            self.waiting = still
+        # 0. deadline shedding (step-granular, from the freshest clock
+        # sample already taken): WAITING requests whose TTFT or e2e
+        # deadline has already passed can no longer meet their SLO — shed
+        # them before they cost a slot
+        self._shed_expired_waiting(finished_now)
 
-        # 2. one prefill chunk for the oldest mid-prefill request
-        pre = [r for r in self.running.values()
-               if r.state is RequestState.PREFILL]
-        if pre:
-            req = min(pre, key=lambda r: r.id)
-            pool = self.pools[req.tier]
-            self._dispatch_seq += 1
-            start = req.prefill_pos
-            t0 = self._clock() if self._timed else 0.0
-            chunk_logits = self.engine.prefill_chunk_into_slot(
-                pool, req.slot, req.prompt_padded, start,
-                prompt_len=req.prompt_len)
-            C = self.engine.scfg.prefill_chunk
-            req.prefill_pos = min(start + C, req.prompt_len)
-            final = req.prefill_pos >= req.prompt_len
-            if final:
-                req.state = RequestState.DECODE
-                if getattr(pool, "paged", False):
-                    # publish the prompt's whole pages to the prefix
-                    # cache — later requests with the same token prefix
-                    # adopt them instead of re-prefilling
-                    pool.register_prefix(req.slot, req.prompt)
-                # two blocking transfers: the final-chunk logits and the
-                # sampled first token
-                self.n_host_syncs += 2
-                tok = sample_one(chunk_logits[(req.prompt_len - 1) % C],
-                                 req.step_key(), req.sampling.temperature)
-            if self._timed:
-                t1 = self._clock()
-                n_tok = req.prefill_pos - start
-                if self.tracer is not None:
-                    self.tracer.complete(
-                        "prefill_chunk", t0, t1, pid=PID_SCHEDULER, tid=0,
-                        args={"req": req.id, "tier": req.tier, "pos": start,
-                              "tokens": n_tok, "final": final,
-                              "dispatch": self._dispatch_seq})
-                if self.profiler is not None:
-                    self.profiler.record_prefill(
-                        tier=req.tier, n_tokens=n_tok, wall_s=t1 - t0)
-            if self._r_chunks is not None:
-                self._r_chunks.inc(tier=req.tier)
-            if final:
-                self._emit(req, tok, emitted, finished_now,
-                           dispatch=self._dispatch_seq)
+        # 1. admission: priority-then-arrival scan (stable — one class is
+        # exactly the FCFS scan); a request is admitted when its tier's
+        # pool has a free slot (paged: slot AND pages).  When it cannot
+        # be admitted and a strictly lower-priority DECODE slot exists in
+        # its tier, that victim is PREEMPTED: slot freed (registered
+        # prompt pages stay in the prefix cache), request requeued with a
+        # resume buffer (DESIGN.md §16).  The scan early-exits once no
+        # waiter could be admitted even by preemption: the scan order is
+        # priority-sorted, so the first hopeless waiter proves the rest
+        # hopeless too — a backlogged queue stays O(sort) per step.
+        admitted: List[Request] = []
+        if self.waiting:
+            free_total = sum(p.n_free for p in self.pools.values())
+            order = sorted(self.waiting, key=lambda r: r.priority)
+            run_prios = [r.priority for r in self.running.values()
+                         if r.state is RequestState.DECODE]
+            max_run_prio = max(run_prios) if run_prios else None
+            for req in order:
+                if req.hold_until_step > self.n_steps:
+                    continue           # fault backoff: not yet retryable
+                if free_total == 0 and (max_run_prio is None
+                                        or req.priority >= max_run_prio):
+                    break              # neither a slot nor a victim
+                if self._try_admit(req):
+                    admitted.append(req)
+                    free_total = sum(p.n_free
+                                     for p in self.pools.values())
+                    run_prios = [r.priority
+                                 for r in self.running.values()
+                                 if r.state is RequestState.DECODE]
+                    max_run_prio = max(run_prios) if run_prios else None
+            if admitted:
+                gone = {id(r) for r in admitted}
+                self.waiting = deque(r for r in self.waiting
+                                     if id(r) not in gone)
+
+        # 2. prefill chunks for the oldest mid-prefill request (one per
+        # round unless the SLO policy budgets more from the cost model)
+        n_chunks = 1 if self.slo is None \
+            else self.slo.prefill_chunks_per_step(self)
+        for _ in range(n_chunks):
+            if not self._prefill_one_chunk(emitted, finished_now):
+                break
 
         # 3. one decode round (burst of K token-steps) per tier cohort
         dec = sorted((r for r in self.running.values()
@@ -416,11 +446,262 @@ class Scheduler:
 
         self.n_steps += 1
         now = self._clock()
+        self._last_now = now
+        # queue-wait stamps for this round's admissions (the tracer path
+        # stamped precisely at admission; everyone else gets the round's
+        # clock sample — zero extra clock calls either way)
+        for req in admitted:
+            if req.admit_time is None:
+                req.admit_time = now
+            self.metrics.on_admit(req)
+        # e2e deadline enforcement for running requests (step-granular)
+        for req in [r for r in self.running.values()
+                    if r.e2e_deadline_s is not None
+                    and r.arrival_time is not None
+                    and now - r.arrival_time > r.e2e_deadline_s]:
+            self._retire(req, "deadline_exceeded", now, finished_now)
         self.metrics.on_step(
             now, {t: p.n_used for t, p in self.pools.items()})
         if self.obs is not None:
             self._obs_step(now)
         return {"emitted": emitted, "finished": finished_now}
+
+    # ------------------------------------------------------------------
+    # Admission, preemption, deadline shedding (DESIGN.md §16)
+    # ------------------------------------------------------------------
+    def _try_admit(self, req: Request) -> bool:
+        """Admit ``req`` into its tier's pool, preempting lower-priority
+        DECODE slots of that tier if needed (and possible).  On success
+        the request is PREFILL-state and registered in ``running``."""
+        pool = self.pools[req.tier]
+        max_new = req.sampling.max_new_tokens - max(req.n_generated - 1, 0)
+        paged = getattr(pool, "paged", False)
+        while True:
+            if paged:
+                # paged admission (DESIGN.md §15): a slot AND enough
+                # arena pages for the request's worst-case growth; a
+                # prefix-cache hit adopts shared pages and resumes
+                # prefill past them — which is what makes a preempted
+                # request's resume re-prefill only its generated tail
+                adm = pool.admit(req.prefill_tokens, max_new)
+                if adm is not None:
+                    req.slot, req.prefill_pos, req.prefix_hit_tokens = adm
+                    break
+            elif pool.n_free:
+                req.slot = pool.alloc()
+                req.prefill_pos = 0
+                break
+            victim = self._pick_victim(req.tier, req.priority)
+            if victim is None:
+                return False
+            self._preempt(victim, reason="priority")
+        if paged and self._r_hits is not None and req.prefix_hit_tokens > 0:
+            self._r_hits.inc(tier=req.tier)
+            self._r_hit_tokens.inc(req.prefix_hit_tokens, tier=req.tier)
+        req.state = RequestState.PREFILL
+        # one-time prompt pre-pass: int32 + chunk padding hoisted out of
+        # the per-chunk loop (engine slices views from it); rebuilt after
+        # a preemption because the resume buffer replaced the prompt
+        if req.prompt_padded is None:
+            req.prompt_padded, _ = self.engine.pad_prompt(
+                req.prefill_tokens)
+        self.running[(req.tier, req.slot)] = req
+        # admit stamp feeds the WAITING span; gated so the disabled path
+        # makes zero extra clock calls
+        if self.tracer is not None:
+            req.admit_time = self._clock()
+        if self._r_adm is not None:
+            self._r_adm.inc(tier=req.tier)
+        return True
+
+    def _pick_victim(self, tier: str,
+                     priority: int) -> Optional[Request]:
+        """The DECODE request of ``tier`` to evict for a priority-
+        ``priority`` waiter: strictly lower class only (never preempt an
+        equal — that would livelock two requests trading one slot), the
+        lowest class first, and among equals the one with the least
+        generated output (cheapest KV recompute), then the youngest."""
+        cands = [r for r in self.running.values()
+                 if r.tier == tier and r.state is RequestState.DECODE
+                 and r.priority > priority]
+        if not cands:
+            return None
+        return max(cands,
+                   key=lambda r: (r.priority, -r.n_generated, r.id))
+
+    def _preempt(self, req: Request, reason: str = "priority") -> None:
+        """Evict ``req`` from its slot and requeue it WAITING with a
+        resume buffer: the original prompt plus every generated token but
+        the last (the last token is the next decode INPUT — its KV was
+        never written).  The slot's pages are freed; on a paged pool the
+        registered prompt pages stay alive in the prefix cache, so
+        re-admission prefix-hits them and re-prefills only the generated
+        tail.  ``n_generated`` and the output are preserved, which (with
+        per-(request, step) keys) makes the resumed continuation
+        bit-identical to an unpreempted run."""
+        assert req.state in (RequestState.PREFILL, RequestState.DECODE)
+        del self.running[(req.tier, req.slot)]
+        self.pools[req.tier].free(req.slot)
+        req.slot = None
+        req.state = RequestState.WAITING
+        if req.output_tokens:
+            req.resume_prompt = np.concatenate(
+                [req.prompt,
+                 np.asarray(req.output_tokens[:-1], np.int32)]) \
+                if req.n_generated > 1 else req.prompt
+        req.prompt_padded = None
+        req.prefill_pos = 0
+        req.prefix_hit_tokens = 0
+        req.n_preemptions += 1
+        req.last_enqueue_time = self._last_now
+        req.admit_time = None
+        self.waiting.append(req)
+        self.metrics.on_preempt(req, reason=reason)
+        if self.tracer is not None and self._last_now is not None:
+            self.tracer.instant(
+                "preempted", self._last_now, pid=PID_REQUESTS,
+                tid=req.id or 0,
+                args={"reason": reason, "n_generated": req.n_generated,
+                      "n_preemptions": req.n_preemptions})
+
+    def _shed_expired_waiting(self, finished_now: List[Request]) -> None:
+        """Retire WAITING requests whose TTFT or e2e deadline already
+        passed (they can no longer meet their SLO; holding them only
+        starves feasible work).  Uses the freshest existing clock sample
+        — no extra clock calls on the disabled-obs path."""
+        now = self._last_now
+        if now is None or not self.waiting:
+            return
+        expired = [
+            r for r in self.waiting
+            if r.arrival_time is not None
+            and ((r.ttft_deadline_s is not None
+                  and r.first_token_time is None
+                  and now - r.arrival_time > r.ttft_deadline_s)
+                 or (r.e2e_deadline_s is not None
+                     and now - r.arrival_time > r.e2e_deadline_s))]
+        if not expired:
+            return
+        gone = {id(r) for r in expired}
+        self.waiting = deque(r for r in self.waiting
+                             if id(r) not in gone)
+        for r in expired:
+            self._finish_unadmitted(r, "deadline_exceeded", now,
+                                    finished_now)
+
+    def _finish_unadmitted(self, req: Request, reason: str,
+                           now: float,
+                           finished_now: Optional[List[Request]]) -> None:
+        """Retire a request that holds no slot (rejected at submit, or
+        shed from the WAITING queue)."""
+        req.state = RequestState.FINISHED
+        req.finish_reason = reason
+        req.finish_time = now
+        self.finished.append(req)
+        if finished_now is not None:
+            finished_now.append(req)
+        self.metrics.on_finish(req)
+        if self.tracer is not None:
+            self._trace_request(req)
+
+    # ------------------------------------------------------------------
+    # Fault recovery (DESIGN.md §16)
+    # ------------------------------------------------------------------
+    def _on_fault(self, cohort: List[Request], fault: StepFault,
+                  finished_now: List[Request]) -> None:
+        """One engine dispatch died or returned poisoned output: drop the
+        dispatch's outputs whole, invalidate every affected slot, and
+        requeue the requests through the preempt-and-resume path (their
+        KV is recomputed, so the recovery is bit-identical).  Each
+        request's retry budget is charged; exhausted requests retire with
+        ``finish_reason='fault'``; survivors are held back
+        exponentially-longer each time (backoff in scheduler steps)."""
+        self.metrics.on_fault(fault, len(cohort))
+        for r in list(cohort):
+            backoff = self._retry.record_fault(r.id)
+            r.n_faults += 1
+            if backoff is None:
+                # budget exhausted: permanent retirement.  The slot is
+                # still owned here — _retire frees it.
+                now = self._last_now if self._last_now is not None \
+                    else r.arrival_time
+                self._retire(r, "fault", now, finished_now)
+            else:
+                r.hold_until_step = self.n_steps + backoff
+                self._preempt(r, reason="fault")
+
+    def _tokens_poisoned(self, toks: np.ndarray) -> bool:
+        """Poisoned-output guard (armed only with a fault injector, like
+        a deployment's isfinite guard): sampled ids must be valid vocab
+        entries."""
+        return bool(np.any((toks < 0) | (toks >= self.engine.cfg.vocab)))
+
+    def _prefill_one_chunk(self, emitted: List,
+                           finished_now: List[Request]) -> bool:
+        """One prefill-chunk dispatch for the oldest mid-prefill request;
+        returns False when there was nothing to prefill or the served
+        request finished its prompt (callers budgeting several chunks per
+        round stop there).  Serves the resume buffer after a preemption —
+        the final chunk of a resume emits NOTHING (those tokens were
+        already delivered; only their KV needed recomputing)."""
+        pre = [r for r in self.running.values()
+               if r.state is RequestState.PREFILL]
+        if not pre:
+            return False
+        req = min(pre, key=lambda r: r.id)
+        pool = self.pools[req.tier]
+        self._dispatch_seq += 1
+        start = req.prefill_pos
+        plen = req.prefill_len
+        t0 = self._clock() if self._timed else 0.0
+        try:
+            chunk_logits = self.engine.prefill_chunk_into_slot(
+                pool, req.slot, req.prompt_padded, start,
+                prompt_len=plen, need_logits=not req.is_resuming)
+        except StepFault as f:
+            self._on_fault([req], f, finished_now)
+            return False
+        C = self.engine.scfg.prefill_chunk
+        req.prefill_pos = min(start + C, plen)
+        final = req.prefill_pos >= plen
+        resumed = req.is_resuming
+        if final:
+            req.state = RequestState.DECODE
+            if getattr(pool, "paged", False):
+                # publish the committed whole pages to the prefix cache —
+                # later requests (or this one, preempted again) with the
+                # same token prefix adopt them instead of re-prefilling
+                pool.register_prefix(req.slot, req.prefill_tokens)
+            if resumed:
+                # replay complete: KV now covers prompt + generated[:-1];
+                # decode continues at the preserved n_generated with
+                # output_tokens[-1] as the next input.  No logits were
+                # computed, nothing crosses the host, nothing is emitted.
+                req.resume_prompt = None
+            else:
+                # two blocking transfers: the final-chunk logits and the
+                # sampled first token
+                self.n_host_syncs += 2
+                tok = sample_one(chunk_logits[(plen - 1) % C],
+                                 req.step_key(), req.sampling.temperature)
+        if self._timed:
+            t1 = self._clock()
+            n_tok = req.prefill_pos - start
+            if self.tracer is not None:
+                self.tracer.complete(
+                    "prefill_chunk", t0, t1, pid=PID_SCHEDULER, tid=0,
+                    args={"req": req.id, "tier": req.tier, "pos": start,
+                          "tokens": n_tok, "final": final,
+                          "dispatch": self._dispatch_seq})
+            if self.profiler is not None:
+                self.profiler.record_prefill(
+                    tier=req.tier, n_tokens=n_tok, wall_s=t1 - t0)
+        if self._r_chunks is not None:
+            self._r_chunks.inc(tier=req.tier)
+        if final and not resumed:
+            self._emit(req, tok, emitted, finished_now,
+                       dispatch=self._dispatch_seq)
+        return not final
 
     def _obs_step(self, now: float) -> None:
         """Post-round observability publication (obs-enabled path only):
@@ -488,8 +769,17 @@ class Scheduler:
         self._dispatch_seq += 1
         ctx = self._cohort_context(dec, pool)
         t0 = self._clock() if self._timed else 0.0
-        toks = self.engine.decode_slots(pool, tokens, keys[0], temps)
+        try:
+            toks = self.engine.decode_slots(pool, tokens, keys[0], temps)
+        except StepFault as f:
+            self._on_fault(dec, f, finished_now)
+            return
         self.n_host_syncs += 1
+        if self._ft_check \
+                and self._tokens_poisoned(toks[[r.slot for r in dec]]):
+            self._on_fault(dec, StepFault("nan", "decode ids out of vocab"),
+                           finished_now)
+            return
         if self._timed:
             self._obs_decode(dec, pool, 1, len(dec), ctx, t0, self._clock())
         self.metrics.on_decode_burst(1, len(dec), tier=pool.kv_dtype)
@@ -528,9 +818,20 @@ class Scheduler:
         self._dispatch_seq += 1
         ctx = self._cohort_context(dec, pool)
         t0 = self._clock() if self._timed else 0.0
-        toks, valid = self.engine.decode_burst(
-            pool, tokens, keys, temps, active, rem, eos)
+        try:
+            toks, valid = self.engine.decode_burst(
+                pool, tokens, keys, temps, active, rem, eos)
+        except StepFault as f:
+            self._on_fault(dec, f, finished_now)
+            return
         self.n_host_syncs += 1
+        if self._ft_check and self._tokens_poisoned(toks[valid]):
+            # the burst committed pool.lengths before the guard tripped;
+            # preempt-and-requeue frees the slot (and its pages), so the
+            # poisoned commits never reach a served token
+            self._on_fault(dec, StepFault("nan", "burst ids out of vocab"),
+                           finished_now)
+            return
         n_emit = int(valid.sum())
         if self._timed:
             self._obs_decode(dec, pool, k, n_emit, ctx, t0, self._clock())
@@ -614,6 +915,7 @@ class Scheduler:
         del self.running[(req.tier, req.slot)]
         self.pools[req.tier].free(req.slot)
         req.slot = None
+        self._retry.clear(req.id)
         self.finished.append(req)
         finished_now.append(req)
         self.metrics.on_finish(req)

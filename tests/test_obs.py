@@ -426,6 +426,7 @@ REPORT_KEYS = {
     "e2e_latency_mean_s", "e2e_latency_p50_s", "e2e_latency_p95_s",
     "itl_burst_spread_mean_s", "itl_burst_spread_p50_s",
     "itl_burst_spread_p95_s",
+    "finish_reasons", "queue_wait_p50_s", "queue_wait_p95_s",
 }
 
 TRACE_EVENT_KEYS = {

@@ -109,6 +109,84 @@ def test_random_op_sequences_preserve_every_invariant(data):
     assert a.pages_free + a.pages_cached == n_pages - 1
 
 
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_preempt_resume_tapes_never_leak(data):
+    """Scheduler-shaped tapes (DESIGN.md §16): admit -> prefill+register
+    -> decode ensures -> PREEMPT (free mid-decode; registered prompt
+    pages stay cache-only) -> RESUME (re-admit prompt + generated[:-1]
+    at the reduced budget) interleaved across slots.  Every §15 invariant
+    must hold after every op, and at drain no page refcount survives
+    outside the cache — preemption churn leaks nothing."""
+    n_slots = data.draw(st.integers(1, 3))
+    pps = data.draw(st.integers(2, 4))
+    n_pages = data.draw(st.integers(1 + pps, 1 + n_slots * pps + 2))
+    a = PageAllocator(n_pages, PS, n_slots, pps, align=PS)
+    capacity = pps * PS
+    live = {}      # slot -> req dict (w = write-ensured watermark)
+    pending = []   # preempted requests waiting to resume
+
+    def _admit(req):
+        """Scheduler admission: resume buffer = prompt + generated[:-1],
+        budget shrunk so prompt_len + max_new total positions hold."""
+        g = len(req["gen"])
+        pre = req["prompt"] + req["gen"][:-1] if g > 1 else req["prompt"]
+        budget = req["max_new"] - max(g - 1, 0)
+        r = a.admit(pre, budget)
+        if r is None:
+            return False
+        slot, pos, hit, _ = r
+        assert hit % PS == 0 and hit <= len(pre)
+        # prefill the tail past the hit, then publish the whole prefix
+        a.ensure(slot, pos + 1, len(pre))
+        a.register_prefix(slot, pre)
+        req["w"] = len(pre)
+        req["limit"] = len(pre) + budget
+        live[slot] = req
+        return True
+
+    for _ in range(data.draw(st.integers(1, 40))):
+        op = data.draw(st.sampled_from(
+            ["admit", "resume", "decode", "preempt", "finish"]))
+        if op == "admit":
+            p_len = data.draw(st.integers(1, capacity - 1))
+            max_new = data.draw(st.integers(1, capacity - p_len))
+            prompt = data.draw(st.lists(st.integers(0, 2), min_size=p_len,
+                                        max_size=p_len))
+            _admit({"prompt": prompt, "gen": [], "max_new": max_new})
+        elif op == "resume" and pending:
+            req = pending.pop(0)
+            if not _admit(req):
+                pending.append(req)       # arena full: stays queued
+        elif op == "decode" and live:
+            slot = data.draw(st.sampled_from(sorted(live)))
+            req = live[slot]
+            if req["w"] < req["limit"]:
+                a.ensure(slot, req["w"], req["w"] + 1)
+                req["w"] += 1
+                req["gen"].append(data.draw(st.integers(0, 2)))
+        elif op == "preempt" and live:
+            slot = data.draw(st.sampled_from(sorted(live)))
+            a.free_slot(slot)
+            pending.append(live.pop(slot))
+        elif op == "finish" and live:
+            slot = data.draw(st.sampled_from(sorted(live)))
+            a.free_slot(slot)
+            del live[slot]
+        a.check()
+
+    for slot in sorted(live):
+        a.free_slot(slot)
+    a.check()
+    assert a.pages_in_use == 0
+    assert a.n_free_slots == n_slots
+    assert a.pages_free + a.pages_cached == n_pages - 1
+    # no refcount survives outside the cache: every remaining reference
+    # is exactly one cache hold on a registered page
+    held = np.flatnonzero(a.refcounts[1:]) + 1
+    assert all(int(a.refcounts[p]) == 1 and p in a.page_key for p in held)
+
+
 @settings(max_examples=40, deadline=None)
 @given(data=st.data())
 def test_registered_prefixes_hit_until_evicted(data):
