@@ -116,6 +116,40 @@ pair in ``BENCH_serve_baseline.json``:
         --slo-max-waiting 8 \
         --baseline-json benchmarks/BENCH_serve_baseline.json
 
+**Speculative decoding (DESIGN.md §17)**: ``--spec`` attaches the
+draft/verify engine — K draft tokens under ``--draft-policy``'s
+aggressive KV tier (default int8, the self-drafting configuration:
+SAME weights, cheaper numerics), verified in ONE target dispatch with
+longest-agreeing-prefix acceptance.  Accepted output is bit-identical
+to a spec-off run; the point reports the ``spec`` metrics block
+(acceptance rate, accepted-per-verify-dispatch, spec-aware
+dispatches_per_token) plus the planner snapshot.  ``--spec-corrupt``
+garbles every draft (seeded collapse harness), demonstrating the
+K-controller's fall-back to plain bursts.  The committed spec triple:
+
+    # the dispatch-reduction pair: per-token target dispatch cadence
+    # (--max-burst 1), spec off vs on — spec-on emits >1 accepted token
+    # per verify dispatch, cutting dispatches-per-token below the
+    # one-per-token floor
+    python benchmarks/serve_bench.py --kv-dtype bf16 --requests 6 \
+        --rate 2 --seed 9 --max-new 33 --max-burst 1 \
+        --baseline-json benchmarks/BENCH_serve_baseline.json
+    python benchmarks/serve_bench.py --kv-dtype bf16 --requests 6 \
+        --rate 2 --seed 9 --max-new 33 --max-burst 1 --spec \
+        --baseline-json benchmarks/BENCH_serve_baseline.json
+    # the collapse guard: corrupted drafts (0 acceptance) against the
+    # plain-burst reference (same line without --spec/--spec-corrupt) —
+    # the planner collapses to plain bursts and switches off after
+    # max_collapses failed probes, so dispatches_per_token stays within
+    # probe-overhead of spec-off
+    python benchmarks/serve_bench.py --kv-dtype bf16 --requests 6 \
+        --rate 2 --seed 9 --max-new 33 --max-burst 8 \
+        --baseline-json benchmarks/BENCH_serve_baseline.json
+    python benchmarks/serve_bench.py --kv-dtype bf16 --requests 6 \
+        --rate 2 --seed 9 --max-new 33 --max-burst 8 --spec \
+        --spec-corrupt \
+        --baseline-json benchmarks/BENCH_serve_baseline.json
+
 Smoke (CPU, ~1 min incl. compile):
     python benchmarks/serve_bench.py
 Burst amortization sweep:
@@ -202,6 +236,24 @@ def build_fault_injector(args):
         return "nan" if frng.random() < 0.5 else "injected"
 
     return injector, lambda: armed.append(True)
+
+
+def build_spec(args):
+    """A ``SpecConfig`` from the --spec-* flags, or None when --spec is
+    off.  ``--draft-policy`` names the draft KV tier (int8/fp8/bf16) or a
+    PrecisionPolicy JSON path for the whole draft engine."""
+    if not args.spec:
+        return None
+    from repro.serve import SpecConfig
+    draft_kv, draft_policy = args.draft_policy, None
+    if os.path.exists(args.draft_policy):
+        from repro.quant.policy import PrecisionPolicy
+        with open(args.draft_policy) as f:
+            draft_policy = PrecisionPolicy.from_json(f.read())
+        draft_kv = draft_policy.kv
+    return SpecConfig(draft_kv=draft_kv, draft_policy=draft_policy,
+                      k_max=args.spec_k, k_init=args.spec_k,
+                      corrupt_drafts=args.spec_corrupt)
 
 
 def build_engine(args, cfg, params, kv_dtype, mesh, policy=None,
@@ -299,7 +351,7 @@ def make_workload(args, vocab):
     return arrivals, prompts, priorities
 
 
-def warmup(engine, prompts, max_new, tiers=None):
+def warmup(engine, prompts, max_new, tiers=None, spec=None):
     """Compile the chunk/decode/burst steps off the clock so the first
     request's TTFT measures scheduling, not XLA.
 
@@ -309,7 +361,16 @@ def warmup(engine, prompts, max_new, tiers=None):
     per such K — with max_new = K + 1, whose lone burst is planned exactly
     K — compiles the complete ladder without touching the engine's pool
     geometry.  With ``tiers`` the ladder runs once per KV tier (each tier
-    is its own compiled step set, keyed per pool in the engine)."""
+    is its own compiled step set, keyed per pool in the engine).
+
+    With ``spec`` the draft/verify ladder compiles too: one throwaway
+    request per reachable K (the planner can halve down to 1, so the
+    whole power-of-two ladder <= k_max), each through a scheduler pinned
+    at k_init = k_max = K.  The DraftEngine caches its inner compute
+    engine on the target engine, so the timed scheduler's own DraftEngine
+    reuses every draft/verify compile from here."""
+    import dataclasses
+
     from repro.serve import Request, SamplingParams, Scheduler
     sched = Scheduler(engine, tiers=tiers)
     top = min(engine.scfg.max_burst, max(max_new - 1, 1))
@@ -321,6 +382,22 @@ def warmup(engine, prompts, max_new, tiers=None):
                                      temperature=engine.scfg.temperature,
                                      max_new_tokens=k + 1)))
             sched.run(max_steps=200)
+    if spec is None:
+        return
+    stop = min(spec.k_max, max(max_new - 2, 1))
+    for k in [1 << i for i in range(stop.bit_length()) if (1 << i) <= stop]:
+        # k_init == k_max == K pins the first spec round's draft length at
+        # exactly K (budget max_new-1 = K+1 covers the K+1-token window),
+        # compiling the K-step draft burst and the S=K+1 verify
+        wcfg = dataclasses.replace(spec, k_init=k, k_max=k,
+                                   corrupt_drafts=False)
+        wsched = Scheduler(engine, tiers=tiers, spec=wcfg)
+        for tier in (tiers or [None]):
+            wsched.submit(Request(prompt=prompts[0], kv_policy=tier,
+                                  sampling=SamplingParams(
+                                      temperature=engine.scfg.temperature,
+                                      max_new_tokens=k + 2)))
+            wsched.run(max_steps=200)
 
 
 def point_label(cfg, kv_dtype, tiers, max_burst, weight_kernel="auto",
@@ -336,6 +413,8 @@ def point_label(cfg, kv_dtype, tiers, max_burst, weight_kernel="auto",
             stem += "_prio"             # collide in a shared --out-dir
         if args.fault_rate:
             stem += "_fault"
+        if args.spec:                   # spec-on/off pairs (DESIGN.md §17)
+            stem += "_speccorrupt" if args.spec_corrupt else "_spec"
     return stem
 
 
@@ -367,9 +446,10 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None, arm_fault=None):
                            StepProfiler, Tracer)
     from repro.serve import Request, SamplingParams, Scheduler
     arrivals, prompts, priorities = make_workload(args, cfg.vocab)
+    spec = build_spec(args)
     if not args.no_warmup:
         t0 = time.monotonic()
-        warmup(engine, prompts, args.max_new, tiers=tiers)
+        warmup(engine, prompts, args.max_new, tiers=tiers, spec=spec)
         print(f"== warmup (compile) {time.monotonic() - t0:.1f}s")
     if arm_fault is not None:
         arm_fault()        # faults only in the timed run, never in warmup
@@ -388,7 +468,7 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None, arm_fault=None):
         obs.tracer = Tracer()
         obs.registry = MetricsRegistry()
         obs.snapshots = SnapshotWriter(obs.registry, stem + ".metrics.jsonl")
-    sched = Scheduler(engine, tiers=tiers, obs=obs, slo=slo)
+    sched = Scheduler(engine, tiers=tiers, obs=obs, slo=slo, spec=spec)
     for tier, pool in sorted(sched.pools.items()):
         print(f"== pool[{tier}]: {pool.n_slots} slots x {pool.max_len} "
               f"positions; {pool.bytes_per_token} B/token, "
@@ -430,6 +510,14 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None, arm_fault=None):
     finish_reasons = dict(sched.metrics.finish_reasons)
     assert sum(finish_reasons.values()) == len(reqs) == args.requests, \
         (finish_reasons, len(reqs))
+    # token accounting identity (DESIGN.md §17): every emitted token is a
+    # prefill first token, a plain decode emission, or a spec-round
+    # emission — speculation must never double-count or drop tokens
+    m = sched.metrics
+    assert m.total_new_tokens == (len(m.ttft) + m.decode_tokens_emitted
+                                  + m.spec_tokens_emitted), \
+        (m.total_new_tokens, len(m.ttft), m.decode_tokens_emitted,
+         m.spec_tokens_emitted)
     print(f"\n{'req':>4} {'arrive':>7} {'tier':>5} {'prio':>4} {'P':>4} "
           f"{'new':>4} {'ttft_s':>7} {'e2e_s':>7}  reason")
     for a, r in zip(arrivals, reqs):
@@ -515,6 +603,23 @@ def run_point(args, cfg, engine, kv_dtype, tiers=None, arm_fault=None):
     if rep.get("total_new_tokens"):
         rep["host_syncs_per_token"] = round(
             sched.n_host_syncs / rep["total_new_tokens"], 4)
+    if spec is not None:
+        # speculative point stamp (DESIGN.md §17): config + controller
+        # end-state, plus the analytical draft/verify price at the
+        # MEASURED acceptance — the model-vs-measured join for spec mode
+        rep["spec_args"] = {"draft_kv": spec.draft_kv, "k_max": spec.k_max,
+                            "corrupt_drafts": spec.corrupt_drafts}
+        rep["spec_planner"] = sched.spec_planner.snapshot()
+        from repro.perfmodel.analytical import spec_round_latency
+        acc = (rep.get("spec") or {}).get("acceptance_rate") or 0.0
+        dpool = (sched.draft.pools.get(sched.default_tier)
+                 if sched.draft is not None else None)
+        rep["spec_model"] = spec_round_latency(
+            cfg, k=spec.k_max, batch=rep["n_slots"],
+            context=engine.scfg.max_len, acceptance=acc,
+            kv_bytes_per_token=(None if tiers else pool.bytes_per_token),
+            draft_kv_bytes_per_token=(dpool.bytes_per_token
+                                      if dpool is not None else None))
     if args.cache_budget_mb:
         rep["cache_budget_mb"] = args.cache_budget_mb
     # model-vs-measured join (always on): per step shape and per KV tier
@@ -598,6 +703,25 @@ def main():
     ap.add_argument("--max-burst", type=int, default=8,
                     help="device-resident decode burst cap (1 = per-token "
                          "dispatch, DESIGN.md §11)")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decoding (DESIGN.md §17): K draft "
+                         "tokens under the aggressive --draft-policy tier, "
+                         "verified in one target dispatch, longest-"
+                         "agreeing-prefix acceptance — output stays "
+                         "bit-identical to a spec-off run")
+    ap.add_argument("--draft-policy", default="int8",
+                    help="draft engine precision: a KV tier name "
+                         "(int8/fp8/bf16) for the self-drafting "
+                         "configuration, or a PrecisionPolicy JSON path")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft-length ceiling k_max (power-of-two "
+                         "ladder); the acceptance-EMA controller walks K "
+                         "below it")
+    ap.add_argument("--spec-corrupt", action="store_true",
+                    help="adversarial collapse harness: garble every "
+                         "draft token (0 acceptance) to demonstrate the "
+                         "plain-burst fallback — output is STILL "
+                         "bit-identical")
     ap.add_argument("--baseline-json", default=None,
                     help="write {args, points} for the whole sweep here")
     ap.add_argument("--kv-dtype", default="bf16",

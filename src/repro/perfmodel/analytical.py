@@ -180,6 +180,70 @@ def decode_latency(cfg: ModelConfig, scheme: str, *, batch: int, context: int,
             "units_quant": units_q, "units_bf16": units_b}
 
 
+def spec_round_latency(cfg: ModelConfig, *, k: int, batch: int, context: int,
+                       design: str = "xtramac",
+                       draft_scheme: str = "awq_int4",
+                       target_scheme: str = "w8a8",
+                       acceptance: float = 0.7,
+                       kv_bytes_per_token: float = None,
+                       draft_kv_bytes_per_token: float = None,
+                       fpga: FPGAProfile = V80,
+                       use_engine_model: bool = True) -> Dict[str, float]:
+    """Price one speculative decode round (DESIGN.md §17): K draft steps
+    at the aggressive scheme/KV tier plus ONE (K+1)-position verify
+    dispatch at the target precision — the draft/verify pair the serving
+    scheduler issues, so SLO admission can stay honest about speculative
+    throughput.
+
+    The verify dispatch streams the target weights and KV exactly ONCE
+    (its memory phase equals a plain decode step's) while its compute
+    phase covers K+1 positions per row — so the window rides along at
+    ~one plain step's cost exactly where the MAC array has idle compute
+    headroom (the Table-III/IV slot deployment at small batch), and
+    costs linearly per position on the channel-streaming GEMV engine,
+    whose lanes are throughput-matched to HBM by construction.  The
+    model reports whichever bound holds; speculation wins wall clock
+    only in the headroom regime.  (This prices the DEPLOYMENT's
+    single-weight-stream verify; the host engine scores the window as
+    chained exact decode steps inside the one dispatch for bit-identity
+    — see ``serve/engine.py`` ``verify_slots``.)
+
+    ``acceptance`` is the per-position draft acceptance rate a; expected
+    emitted tokens per row per round is the geometric sum
+    E = (1 - a^(K+1)) / (1 - a)  (every round emits at least the verify's
+    own position-0 sample).  Returns the round wall, the effective
+    per-token latency t_round / E, the plain-decode per-token latency at
+    the target precision, and their ratio (> 1 = speculation wins)."""
+    assert k >= 1 and 0.0 <= acceptance < 1.0
+    eng_d = gemv_engine_for(draft_scheme, fpga) if use_engine_model else None
+    eng_t = gemv_engine_for(target_scheme, fpga) if use_engine_model else None
+    draft = decode_latency(
+        cfg, draft_scheme, batch=batch, context=context, design=design,
+        fpga=fpga, kv_bytes_per_token=draft_kv_bytes_per_token,
+        engine_model=eng_d)
+    target = decode_latency(
+        cfg, target_scheme, batch=batch, context=context, design=design,
+        fpga=fpga, kv_bytes_per_token=kv_bytes_per_token,
+        engine_model=eng_t)
+    t_draft = k * draft["t_total_s"]
+    t_verify = max(target["t_mem_s"], (k + 1) * target["t_compute_s"])
+    t_round = t_draft + t_verify
+    a = acceptance
+    e_tokens = (1.0 - a ** (k + 1)) / (1.0 - a) if a > 0 else 1.0
+    t_plain = target["t_total_s"]
+    return {
+        "t_draft_s": t_draft, "t_verify_s": t_verify,
+        "t_round_s": t_round,
+        "expected_tokens_per_row": e_tokens,
+        "t_per_token_s": t_round / e_tokens,
+        "t_plain_per_token_s": t_plain,
+        "speedup": t_plain / (t_round / e_tokens),
+        "verify_bound": "memory"
+        if target["t_mem_s"] >= (k + 1) * target["t_compute_s"]
+        else "compute",
+    }
+
+
 def fig14_simulation(context: int = 512, batches=(1, 8, 32),
                      fpga: FPGAProfile = V80) -> Dict:
     """Reproduce Fig. 14: per-checkpoint decode latency, vendor vs XtraMAC."""

@@ -9,12 +9,14 @@ from .metrics import ServeMetrics
 from .request import Request, RequestState, SamplingParams
 from .scheduler import Scheduler
 from .slo import Rejection, SLOPolicy
+from .spec import DraftEngine, SpecConfig, SpecPlanner
 
 __all__ = [
-    "KVCachePool", "PageAllocator", "PagedKVPool", "PrecisionPolicy",
-    "Rejection", "Request", "RequestState", "RetryBudget",
-    "SamplingParams", "SCHEDULABLE_FAMILIES", "Scheduler", "ServeConfig",
-    "ServeMetrics", "ServingEngine", "SLOPolicy", "StepFault",
+    "DraftEngine", "KVCachePool", "PageAllocator", "PagedKVPool",
+    "PrecisionPolicy", "Rejection", "Request", "RequestState",
+    "RetryBudget", "SamplingParams", "SCHEDULABLE_FAMILIES", "Scheduler",
+    "ServeConfig", "ServeMetrics", "ServingEngine", "SLOPolicy",
+    "SpecConfig", "SpecPlanner", "StepFault",
     "bytes_per_page", "bytes_per_slot", "pages_for_budget",
     "slots_for_budget",
 ]

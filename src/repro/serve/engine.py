@@ -129,7 +129,7 @@ class ServeConfig:
     policy: Optional[PrecisionPolicy] = None
     # fault-injection hook (DESIGN.md §16): a callable
     # ``(kind, seq) -> Optional[str]`` consulted once per engine dispatch
-    # (kind in {'prefill', 'decode', 'burst'}; ``seq`` is the engine's
+    # (kind in {'prefill', 'decode', 'burst', 'verify'}; ``seq`` is the
     # monotone dispatch counter, so a test or bench can kill step #7
     # deterministically).  Return None for no fault; 'nan' to poison the
     # dispatch's sampled tokens (exercises the scheduler's poisoned-output
@@ -330,6 +330,45 @@ class ServingEngine:
                 step, (cache, tokens, lengths, active, rem), keys)
             return cache, toks, valid
 
+        def verify_slots(params, tokens, cache, lengths, key_schedule,
+                         temps):
+            """Speculative verify (DESIGN.md §17): score ALL K+1 window
+            positions of every row in ONE dispatch.  ``tokens``
+            [n_slots, S] is each row's [last_committed, d_1..d_K] window;
+            position j's logits predict token n_generated+j and are
+            sampled with ``key_schedule[j]`` — the SAME per-(id,
+            n_generated) keys a plain decode step would use — so the
+            target's own samples g_0..g_K come back [S, n_slots] and the
+            host accepts the longest prefix with g_{j-1} == d_j.
+
+            The window runs as a ``lax.scan`` of EXACT plain decode
+            steps *inside* the dispatch: step j is byte-for-byte the
+            ``decode_burst`` step body (same s==1 forward, same KV
+            write, same ``sample_rows``), which is the bit-identity
+            argument ON EVERY GEOMETRY — under a mesh the s==1 steps hit
+            the same Pallas kernels (fused decode attention, packed
+            matvec) as the non-speculative scheduler, whereas a parallel
+            S-wide scoring pass routes to bitwise-DIFFERENT kernels
+            (einsum attention, the matmul block plan) whose last-bit
+            logit differences temperature sampling amplifies into token
+            flips.  One dispatch either way: the measured economics
+            (dispatches/host-syncs per token) are the scan's; the
+            single-weight-stream verify is the *priced deployment model*
+            (``perfmodel.spec_round_latency``), not the host execution.
+            Length commit/rollback stays host-side (the engine wrapper
+            does NOT advance ``pool.lengths``)."""
+            def step(carry, xs):
+                cache, idx = carry
+                tok, keys = xs
+                logits, _, cache = T.forward(
+                    mcfg, params, {"tokens": tok[:, None]}, cache=cache,
+                    cache_index=idx, mode="decode")
+                return ((cache, idx + 1),
+                        sample_rows(logits[:, -1], keys, temps))
+            (cache, _), sampled = jax.lax.scan(
+                step, (cache, lengths), (tokens.T, key_schedule))
+            return sampled, cache
+
         # ---- paged-pool steps (DESIGN.md §15) --------------------------
         # Same step semantics over a PagedKVPool: ``cache`` is the page
         # arena [L, n_pages, page_size, ...] and each step additionally
@@ -393,6 +432,24 @@ class ServingEngine:
                 step, (cache, tokens, lengths, active, rem), keys)
             return cache, toks, valid
 
+        def verify_slots_paged(params, tokens, cache, lengths, key_schedule,
+                               temps, table):
+            """Paged twin of ``verify_slots``: the caller pins the whole
+            S-wide write window (``ensure_decode(slots, S, rems)``) before
+            dispatch, so the table is invariant across the window's
+            in-dispatch scan steps."""
+            def step(carry, xs):
+                cache, idx = carry
+                tok, keys = xs
+                logits, _, cache = T.forward(
+                    mcfg, params, {"tokens": tok[:, None]}, cache=cache,
+                    cache_index=idx, mode="decode", page_table=table)
+                return ((cache, idx + 1),
+                        sample_rows(logits[:, -1], keys, temps))
+            (cache, _), sampled = jax.lax.scan(
+                step, (cache, lengths), (tokens.T, key_schedule))
+            return sampled, cache
+
         self._prefill = prefill
         self._decode = decode
         self._prefill_chunk_fn = prefill_chunk
@@ -409,6 +466,11 @@ class ServingEngine:
         self._decode_slots_logits = jax.jit(decode_slots_logits,
                                             donate_argnums=(2,))
         self._decode_burst = jax.jit(decode_burst, donate_argnums=(1,))
+        self._verify_slots_fn = verify_slots
+        # the verify jit re-lowers per distinct window width S = K+1 (the
+        # planner's power-of-two K ladder bounds that to log2(max_burst)
+        # variants, same argument as the burst jit)
+        self._verify_slots = jax.jit(verify_slots, donate_argnums=(2,))
         self._prefill_chunk_paged_fn = prefill_chunk_paged
         self._decode_slots_paged_fn = decode_slots_paged
         self._decode_slots_logits_paged_fn = decode_slots_logits_paged
@@ -421,6 +483,9 @@ class ServingEngine:
                                                   donate_argnums=(2,))
         self._decode_burst_paged = jax.jit(decode_burst_paged,
                                            donate_argnums=(1,))
+        self._verify_slots_paged_fn = verify_slots_paged
+        self._verify_slots_paged = jax.jit(verify_slots_paged,
+                                           donate_argnums=(2,))
 
     # ------------------------------------------------------------------
     # Mesh-aware step construction (DESIGN.md §10)
@@ -557,6 +622,47 @@ class ServingEngine:
                     out_shardings=(cache_sh, out_sh, out_sh))
             steps = self._sharded_steps[key] = (pc, ds, dl, db)
         return steps
+
+    def _verify_for(self, pool: KVCachePool):
+        """The speculative-verify jit for ``pool``'s geometry (DESIGN.md
+        §17) — kept out of ``_steps_for``'s 4-tuple so the plain serving
+        paths never pay for it.  Under a mesh the [n_slots, S] window
+        tokens ride the slot (data) axis like decode tokens, the
+        [S, n_slots, 2] key schedule and [S, n_slots] sampled output reuse
+        the burst's schedule/output shardings (slot axis at position 1),
+        and the cache in==out sharding keeps donation alive."""
+        self._declare_execution()
+        paged = getattr(pool, "paged", False)
+        if self.mesh is None:
+            return self._verify_slots_paged if paged else self._verify_slots
+        key = (pool.n_slots, pool.capacity, pool.kv_dtype, paged,
+               getattr(pool, "n_pages", 0), getattr(pool, "page_size", 0),
+               "verify")
+        vs = self._sharded_steps.get(key)
+        if vs is None:
+            from repro.runtime import partitioning as PT
+            cache_sh = self.pool_shardings(pool)
+            rep = NamedSharding(self.mesh, P())
+            burst = PT.serve_burst_pspec(self.mesh, pool.n_slots)
+            tok_sh = NamedSharding(self.mesh, P(burst["row"][0], None))
+            len_sh = NamedSharding(self.mesh, burst["row"])
+            sched_sh = NamedSharding(self.mesh, burst["key_schedule"])
+            out_sh = NamedSharding(self.mesh, burst["burst_out"])
+            if paged:
+                table_sh = NamedSharding(self.mesh, burst["row_keys"])
+                vs = jax.jit(
+                    self._verify_slots_paged_fn, donate_argnums=(2,),
+                    in_shardings=(self._param_shardings, tok_sh, cache_sh,
+                                  len_sh, sched_sh, len_sh, table_sh),
+                    out_shardings=(out_sh, cache_sh))
+            else:
+                vs = jax.jit(
+                    self._verify_slots_fn, donate_argnums=(2,),
+                    in_shardings=(self._param_shardings, tok_sh, cache_sh,
+                                  len_sh, sched_sh, len_sh),
+                    out_shardings=(out_sh, cache_sh))
+            self._sharded_steps[key] = vs
+        return vs
 
     # ------------------------------------------------------------------
     # Pool-based step primitives (the scheduler's interface)
@@ -786,6 +892,38 @@ class ServingEngine:
             toks = np.full_like(toks, -1)
         pool.lengths += valid.sum(axis=0).astype(np.int32)
         return toks, valid
+
+    def verify_slots(self, pool: KVCachePool, tokens: np.ndarray,
+                     key_schedule: np.ndarray,
+                     temperatures: np.ndarray) -> np.ndarray:
+        """Speculative verify over every pool slot (DESIGN.md §17).
+        ``tokens`` [n_slots, S]: row i's window [last_committed, d_1..d_K]
+        written at pool.lengths[i]..+S-1; ``key_schedule`` [S, n_slots, 2]
+        carries each row's real step keys for tokens n_generated..+K.
+        Returns the target's sampled ids [S, n_slots] int32 — g_j at
+        position j.  Does NOT commit ``pool.lengths``: the caller accepts
+        the longest agreeing prefix and sets lengths to the emitted count
+        (which IS the rollback — positions past the committed length are
+        garbage-but-masked, exactly like inactive-slot decode writes)."""
+        n = pool.n_slots
+        tokens = np.asarray(tokens, np.int32).reshape(n, -1)
+        s = tokens.shape[1]
+        assert key_schedule.shape == (s, n, 2), key_schedule.shape
+        poison = self._inject_fault("verify")
+        vs = self._verify_for(pool)
+        step_args = (self.params, jnp.asarray(tokens), pool.cache,
+                     jnp.asarray(pool.lengths),
+                     jnp.asarray(key_schedule, jnp.uint32),
+                     jnp.asarray(temperatures, jnp.float32))
+        if getattr(pool, "paged", False):
+            # the S-wide write window must be pinned by the caller
+            # (``pool.ensure_decode(slots, S, rems)``) before dispatch
+            step_args += (jnp.asarray(pool.page_table),)
+        sampled, pool.cache = vs(*step_args)
+        sampled = np.asarray(sampled)             # the round's verify sync
+        if poison is not None:
+            sampled = np.full_like(sampled, -1)
+        return sampled
 
     # ------------------------------------------------------------------
     # One-shot generation (backwards-compatible wrapper)

@@ -153,6 +153,24 @@ class ServeMetrics:
         self.decode_token_steps = 0     # token-steps those entries covered
         self.decode_tokens_emitted = 0  # tokens that actually surfaced
         self.burst_hist: Dict[int, int] = {}   # planned K -> count
+        # speculative-decoding accounting (DESIGN.md §17).  Identities,
+        # pinned by tests and the bench's inline check:
+        #   tokens_drafted  == tokens_accepted + tokens_rejected
+        #   tokens_emitted  == tokens_accepted + bonus_tokens
+        # and at drain every generated token was emitted exactly once:
+        #   total_new_tokens == first tokens (len(ttft))
+        #                       + decode_tokens_emitted (plain rounds)
+        #                       + spec_tokens_emitted   (spec rounds)
+        self.spec_rounds = 0
+        self.spec_draft_dispatches = 0
+        self.spec_verify_dispatches = 0
+        self.spec_catchup_dispatches = 0   # draft-KV replay prefill chunks
+        self.spec_tokens_drafted = 0
+        self.spec_tokens_accepted = 0      # emitted tokens matching drafts
+        self.spec_tokens_rejected = 0
+        self.spec_bonus_tokens = 0         # verify's own (non-draft) samples
+        self.spec_tokens_emitted = 0
+        self.spec_accept_hist: Dict[int, int] = {}  # accepted/verify -> n
         # optional shared registry (repro.obs) this consumer publishes to
         self._reg = registry
         if registry is not None:
@@ -190,6 +208,21 @@ class ServeMetrics:
             self._r_qwait = registry.histogram(
                 "serve_queue_wait_seconds",
                 "enqueue -> admission wait, by priority class")
+            self._r_spec_rounds = registry.counter(
+                "serve_spec_rounds_total",
+                "speculative draft/verify rounds, by KV tier")
+            self._r_spec_disp = registry.counter(
+                "serve_spec_dispatches_total",
+                "speculation dispatches, by kind "
+                "(draft / verify / catchup) and KV tier")
+            self._r_spec_tok = registry.counter(
+                "serve_spec_tokens_total",
+                "draft-window token outcomes, by result "
+                "(accepted / rejected / bonus) and KV tier")
+            self._r_spec_acc = registry.histogram(
+                "serve_spec_accepted_per_verify",
+                "draft tokens accepted per verify dispatch",
+                buckets=(0, 1, 2, 4, 8, 16, 32))
 
     # -- event hooks (called by the scheduler) -----------------------------
     def on_arrival(self, now: float) -> None:
@@ -294,6 +327,48 @@ class ServeMetrics:
             self._r_steps.inc(k, tier=t)
             self._r_burst.observe(k, tier=t)
 
+    def on_spec_round(self, k: int, rows: int, drafted: int, accepted: int,
+                      emitted: int, catchup_dispatches: int = 0,
+                      tier: Optional[str] = None) -> None:
+        """One speculative round (DESIGN.md §17): a K-step draft burst
+        plus ONE target verify dispatch covering ``rows`` cohort rows.
+        ``drafted`` counts proposed draft tokens (K per row),
+        ``accepted`` the emitted tokens that matched drafts, ``emitted``
+        every token that surfaced (accepted + at most one bonus/
+        correction sample per row, EOS/budget truncation included).
+        ``catchup_dispatches``: draft-KV replay prefill chunks issued
+        before the round's draft burst."""
+        bonus = emitted - accepted
+        assert 0 <= accepted <= drafted and 0 <= bonus <= rows, \
+            (drafted, accepted, emitted, rows)
+        self.spec_rounds += 1
+        self.spec_draft_dispatches += 1
+        self.spec_verify_dispatches += 1
+        self.spec_catchup_dispatches += catchup_dispatches
+        self.spec_tokens_drafted += drafted
+        self.spec_tokens_accepted += accepted
+        self.spec_tokens_rejected += drafted - accepted
+        self.spec_bonus_tokens += bonus
+        self.spec_tokens_emitted += emitted
+        self.spec_accept_hist[accepted] = \
+            self.spec_accept_hist.get(accepted, 0) + 1
+        if self._reg is not None:
+            t = tier or ""
+            self._r_spec_rounds.inc(tier=t)
+            self._r_spec_disp.inc(kind="draft", tier=t)
+            self._r_spec_disp.inc(kind="verify", tier=t)
+            if catchup_dispatches:
+                self._r_spec_disp.inc(catchup_dispatches, kind="catchup",
+                                      tier=t)
+            if accepted:
+                self._r_spec_tok.inc(accepted, result="accepted", tier=t)
+            if drafted - accepted:
+                self._r_spec_tok.inc(drafted - accepted, result="rejected",
+                                     tier=t)
+            if bonus:
+                self._r_spec_tok.inc(bonus, result="bonus", tier=t)
+            self._r_spec_acc.observe(accepted, tier=t)
+
     def on_finish(self, req) -> None:
         self.n_requests += 1
         self.total_new_tokens += req.n_generated
@@ -381,6 +456,46 @@ class ServeMetrics:
             # ITL timestamps are burst-granular once any K > 1 ran
             out["itl_granularity"] = ("burst" if any(
                 k > 1 for k in self.burst_hist) else "token")
+        if self.spec_rounds:
+            # speculation accounting (DESIGN.md §17): the headline wins
+            # are acceptance_rate (drafts the target agreed with) and
+            # emitted_per_verify_dispatch (> 1 means one target dispatch
+            # delivered more than one token — the whole point)
+            out["spec"] = {
+                "rounds": self.spec_rounds,
+                "draft_dispatches": self.spec_draft_dispatches,
+                "verify_dispatches": self.spec_verify_dispatches,
+                "catchup_dispatches": self.spec_catchup_dispatches,
+                "tokens_drafted": self.spec_tokens_drafted,
+                "tokens_accepted": self.spec_tokens_accepted,
+                "tokens_rejected": self.spec_tokens_rejected,
+                "bonus_tokens": self.spec_bonus_tokens,
+                "tokens_emitted": self.spec_tokens_emitted,
+                "acceptance_rate": round(
+                    self.spec_tokens_accepted / self.spec_tokens_drafted, 4)
+                if self.spec_tokens_drafted else None,
+                "accepted_per_verify_dispatch": round(
+                    self.spec_tokens_accepted
+                    / self.spec_verify_dispatches, 4),
+                "emitted_per_verify_dispatch": round(
+                    self.spec_tokens_emitted
+                    / self.spec_verify_dispatches, 4),
+                "accept_hist": {str(a): c for a, c in
+                                sorted(self.spec_accept_hist.items())},
+                "plain_tokens_emitted": self.decode_tokens_emitted,
+            }
+        if (self.spec_rounds or self.decode_dispatches) \
+                and self.total_new_tokens:
+            # spec-aware amortization across BOTH decode paths: every
+            # dispatch that advanced decode state (plain decode/burst
+            # entries + spec draft + verify + draft-KV catch-up chunks)
+            # over every generated token.  With spec off this is exactly
+            # decode_dispatches_per_token.
+            out["dispatches_per_token"] = round(
+                (self.decode_dispatches + self.spec_draft_dispatches
+                 + self.spec_verify_dispatches
+                 + self.spec_catchup_dispatches)
+                / self.total_new_tokens, 4)
         if self.prefix_hits:
             out["prefix_hits"] = self.prefix_hits
             out["prefix_misses"] = self.prefix_misses

@@ -111,6 +111,7 @@ from .metrics import ServeMetrics
 from .request import Request, RequestState, SamplingParams  # noqa: F401
 from .sampling import (batched_step_keys, sample_one,  # noqa: F401
                        sample_tokens)
+from .spec import DraftEngine, SpecConfig, SpecPlanner, accept_longest_prefix
 
 
 class Scheduler:
@@ -119,7 +120,8 @@ class Scheduler:
                  max_burst: Optional[int] = None,
                  tiers: Union[None, Sequence[str],
                               Mapping[str, Optional[int]]] = None,
-                 obs=None, slo=None):
+                 obs=None, slo=None,
+                 spec: Optional[SpecConfig] = None):
         """``tiers``: KV tiers this scheduler serves — a sequence of tier
         names (each pool sized by the engine's ServeConfig: explicit
         ``n_slots`` or budget-derived per tier) or a {tier: n_slots}
@@ -131,7 +133,12 @@ class Scheduler:
         it at zero cost.  ``slo``: a ``serve.slo.SLOPolicy`` — admission
         control, KV-tier downgrade with hysteresis, and cost-model burst/
         chunk planning (DESIGN.md §16); None keeps the policy-free
-        admit-everything scheduler."""
+        admit-everything scheduler.  ``spec``: a ``serve.spec.SpecConfig``
+        — speculative decoding with low-precision drafts (DESIGN.md §17):
+        eligible decode rounds draft K tokens per row on a cheap twin of
+        the engine and verify the whole window in one target dispatch;
+        accepted tokens stay bit-identical to non-speculative decode.
+        None (default) changes nothing."""
         self.engine = engine
         if pool is not None and tiers is not None:
             raise ValueError("give either pool= or tiers=, not both")
@@ -193,15 +200,32 @@ class Scheduler:
         # timing (clock pair around each engine dispatch) is needed iff
         # someone consumes it; the disabled path takes neither clock call
         self._timed = self.tracer is not None or self.profiler is not None
+        # speculative decoding (DESIGN.md §17): the draft twin and its
+        # K-controller exist only when asked for — spec=None adds zero
+        # state, zero dispatches, zero trace events
+        self.spec_cfg = spec
+        self.draft = DraftEngine(engine, spec) if spec is not None else None
+        self.spec_planner = SpecPlanner(spec) if spec is not None else None
         # stable Perfetto lane per tier on the scheduler process: tid 0 is
-        # the prefill lane, decode tiers get 1.. in sorted order
+        # the prefill lane, decode tiers get 1.. in sorted order; with
+        # speculation enabled each tier additionally gets a draft and a
+        # verify lane past the decode block (registered ONLY then, so
+        # spec-off trace files stay byte-identical)
         self._tier_tid = {t: 1 + i for i, t in enumerate(sorted(self.pools))}
+        base = 1 + len(self.pools)
+        self._spec_tid = {t: (base + 2 * i, base + 2 * i + 1)
+                          for i, t in enumerate(sorted(self.pools))}
         if self.tracer is not None:
             self.tracer.process_name(PID_REQUESTS, "requests")
             self.tracer.process_name(PID_SCHEDULER, "scheduler")
             self.tracer.thread_name(PID_SCHEDULER, 0, "prefill")
             for t, tid in sorted(self._tier_tid.items()):
                 self.tracer.thread_name(PID_SCHEDULER, tid, f"decode:{t}")
+            if spec is not None:
+                for t, (dtid, vtid) in sorted(self._spec_tid.items()):
+                    self.tracer.thread_name(PID_SCHEDULER, dtid, f"draft:{t}")
+                    self.tracer.thread_name(PID_SCHEDULER, vtid,
+                                            f"verify:{t}")
         registry = obs.registry if obs is not None else None
         self._r_steps = self._r_queue = self._r_used = None
         self._r_adm = self._r_chunks = self._r_syncs = None
@@ -388,7 +412,10 @@ class Scheduler:
         # them before they cost a slot
         self._shed_expired_waiting(finished_now)
 
-        # 1. admission: priority-then-arrival scan (stable — one class is
+        # 1. admission: priority-then-deadline-then-arrival scan (EDF
+        # within a priority class: requests carrying a TTFT deadline sort
+        # by its absolute wall time, deadline-free requests after them;
+        # the sort is stable, so with no deadlines set one class is
         # exactly the FCFS scan); a request is admitted when its tier's
         # pool has a free slot (paged: slot AND pages).  When it cannot
         # be admitted and a strictly lower-priority DECODE slot exists in
@@ -401,7 +428,7 @@ class Scheduler:
         admitted: List[Request] = []
         if self.waiting:
             free_total = sum(p.n_free for p in self.pools.values())
-            order = sorted(self.waiting, key=lambda r: r.priority)
+            order = sorted(self.waiting, key=self._admit_order_key)
             run_prios = [r.priority for r in self.running.values()
                          if r.state is RequestState.DECODE]
             max_run_prio = max(run_prios) if run_prios else None
@@ -432,12 +459,25 @@ class Scheduler:
             if not self._prefill_one_chunk(emitted, finished_now):
                 break
 
-        # 3. one decode round (burst of K token-steps) per tier cohort
+        # 3. one decode round (burst of K token-steps) per tier cohort —
+        # or, with speculation enabled and the same conditions under
+        # which bursts plan K > 1 (nothing waiting, no prefill
+        # mid-flight), a speculative draft/verify round (DESIGN.md §17)
         dec = sorted((r for r in self.running.values()
                       if r.state is RequestState.DECODE), key=lambda r: r.id)
+        spec_ok = (self.spec_planner is not None and not self.waiting
+                   and not any(r.state is RequestState.PREFILL
+                               for r in self.running.values()))
         for tier in sorted({r.tier for r in dec}):
             cohort = [r for r in dec if r.tier == tier]
             pool = self.pools[tier]
+            if spec_ok:
+                ks = self.spec_planner.plan([(r, r.slot) for r in cohort],
+                                            pool)
+                if ks >= 1:
+                    self._decode_spec(cohort, pool, ks, emitted,
+                                      finished_now)
+                    continue
             k = self._plan_burst(cohort, pool)
             if k <= 1:
                 self._decode_single(cohort, pool, emitted, finished_now)
@@ -469,6 +509,17 @@ class Scheduler:
     # ------------------------------------------------------------------
     # Admission, preemption, deadline shedding (DESIGN.md §16)
     # ------------------------------------------------------------------
+    @staticmethod
+    def _admit_order_key(r: Request) -> Tuple[int, float]:
+        """Admission scan order: priority class first, then EDF within
+        the class — the ABSOLUTE TTFT deadline (arrival + relative
+        deadline), with deadline-free requests after every deadline
+        carrier.  The sort is stable, so arrival order breaks ties and a
+        deadline-free single-class queue is exactly FCFS."""
+        if r.ttft_deadline_s is None:
+            return (r.priority, float("inf"))
+        return (r.priority, (r.arrival_time or 0.0) + r.ttft_deadline_s)
+
     def _try_admit(self, req: Request) -> bool:
         """Admit ``req`` into its tier's pool, preempting lower-priority
         DECODE slots of that tier if needed (and possible).  On success
@@ -541,6 +592,11 @@ class Scheduler:
         bit-identical to an unpreempted run."""
         assert req.state in (RequestState.PREFILL, RequestState.DECODE)
         del self.running[(req.tier, req.slot)]
+        if self.draft is not None:
+            # mirrored draft-KV state is slot-keyed: stale the moment the
+            # target slot is freed (re-admission catches up from the
+            # request's own committed tokens)
+            self.draft.release(req.tier, req.slot)
         self.pools[req.tier].free(req.slot)
         req.slot = None
         req.state = RequestState.WAITING
@@ -847,6 +903,118 @@ class Scheduler:
                     self._emit(r, int(toks[t, slot]), emitted, finished_now,
                                dispatch=self._dispatch_seq)
 
+    def _decode_spec(self, dec: List[Request], pool: KVCachePool, k: int,
+                     emitted: List, finished_now: List[Request]) -> None:
+        """One speculative round for one tier cohort (DESIGN.md §17):
+        draft K tokens per row on the DraftEngine's mirrored low-precision
+        pool, verify the whole [last, d_1..d_K] window in ONE target
+        dispatch, and emit the longest agreeing prefix plus the target's
+        own next sample.  Every emitted token was sampled by the TARGET
+        model with the request's real per-(id, n_generated) step key, so
+        the output is bit-identical to non-speculative decode at any
+        acceptance rate; a fully-rejected round still emits the verify's
+        position-0 sample (exactly the plain step's token).  Three host
+        syncs per round (key schedule, draft burst, verify) cover up to
+        K+1 tokens per row."""
+        tier = pool.kv_dtype
+        n = pool.n_slots
+        s = k + 1
+        rows = [(r, r.slot) for r in dec]
+        # draft catch-up: replay committed-token suffixes the draft pool
+        # missed (first spec round in a slot, the bonus position after a
+        # fully-accepted round, plain/faulted rounds while speculation
+        # cooled down) — KV-only prefill chunks, no host sync
+        n_catchup = self.draft.catch_up(tier, pool, rows)
+        # ONE key schedule serves the whole round: draft step t consumes
+        # keys[t] (token n_generated + t) and verify position j consumes
+        # keys[j] — the shared Gumbel draw that makes temperature-row
+        # drafts line up with the target's own samples
+        keys = np.zeros((s, n, 2), np.uint32)
+        temps = np.zeros((n,), np.float32)
+        self._key_schedule(dec, s, keys, temps)
+        self._dispatch_seq += 1
+        t0 = self._clock() if self._timed else 0.0
+        drafts = self.draft.draft_burst(tier, pool, rows, k, keys[:k],
+                                        temps)
+        self.n_host_syncs += 1
+        t1 = self._clock() if self._timed else 0.0
+        if self.tracer is not None:
+            self.tracer.complete(
+                "spec_draft", t0, t1, pid=PID_SCHEDULER,
+                tid=self._spec_tid[tier][0],
+                args={"tier": tier, "k": k, "rows": len(dec),
+                      "catchup_chunks": n_catchup,
+                      "dispatch": self._dispatch_seq})
+        window = np.zeros((n, s), np.int32)
+        rems = np.zeros((n,), np.int32)
+        for r, slot in rows:
+            window[slot, 0] = r.last_token
+            window[slot, 1:] = drafts[:, slot]
+            rems[slot] = r.sampling.max_new_tokens - r.n_generated
+        if getattr(pool, "paged", False):
+            # pin the S-wide verify window per row (planner capped K by
+            # each row's budget, so rem >= S and nothing lands in the
+            # garbage page on the accepted path)
+            pool.ensure_decode([slot for _, slot in rows], s,
+                               [int(rems[slot]) for _, slot in rows])
+        self._dispatch_seq += 1
+        verify_dispatch = self._dispatch_seq
+        t2 = self._clock() if self._timed else 0.0
+        try:
+            verified = self.engine.verify_slots(pool, window, keys, temps)
+        except StepFault as f:
+            self._on_fault(dec, f, finished_now)
+            return
+        self.n_host_syncs += 1
+        if self._ft_check and self._tokens_poisoned(
+                verified[:, [slot for _, slot in rows]]):
+            # the verify's outputs are dropped whole; target lengths were
+            # never committed, so the poisoned KV writes stay masked and
+            # the preempt-recompute recovery is bit-identical
+            self._on_fault(dec, StepFault("nan", "verify ids out of vocab"),
+                           finished_now)
+            return
+        # host acceptance: longest agreeing prefix + the target's own
+        # bonus/correction sample, truncated by first-EOS and budget
+        plan: List[Tuple[Request, int, int]] = []
+        drafted = accepted = emitted_total = 0
+        for r, slot in rows:
+            n_emit, n_acc = accept_longest_prefix(
+                drafts[:, slot], verified[:, slot], r.sampling.eos_id,
+                int(rems[slot]))
+            plan.append((r, slot, n_emit))
+            drafted += k
+            accepted += n_acc
+            emitted_total += n_emit
+        # commit target lengths FIRST (the verify wrote all S positions;
+        # committing only n_emit IS the rejection rollback — everything
+        # past the committed length is garbage-but-masked), then sync the
+        # draft pool to the committed state in one length assignment
+        for r, slot, n_emit in plan:
+            pool.lengths[slot] += n_emit
+        self.draft.sync_lengths(tier, pool, rows)
+        self.spec_planner.observe(drafted, accepted)
+        if self._timed:
+            t3 = self._clock()
+            if self.tracer is not None:
+                self.tracer.complete(
+                    "spec_verify", t2, t3, pid=PID_SCHEDULER,
+                    tid=self._spec_tid[tier][1],
+                    args={"tier": tier, "k": k, "rows": len(dec),
+                          "accepted": accepted, "emitted": emitted_total,
+                          "dispatch": verify_dispatch})
+        self.metrics.on_spec_round(
+            k=k, rows=len(dec), drafted=drafted, accepted=accepted,
+            emitted=emitted_total, catchup_dispatches=n_catchup, tier=tier)
+        # step-major emission replay — the exact sequence K+1 single
+        # steps would have produced; slots captured pre-emission because
+        # _emit may retire a request mid-replay
+        for t in range(s):
+            for r, slot, n_emit in plan:
+                if t < n_emit:
+                    self._emit(r, int(verified[t, slot]), emitted,
+                               finished_now, dispatch=verify_dispatch)
+
     def _cohort_context(self, dec: List[Request], pool: KVCachePool) -> int:
         """Mean committed context across a cohort BEFORE its dispatch —
         what the analytical model prices the round's KV streaming at.
@@ -913,6 +1081,8 @@ class Scheduler:
         req.finish_reason = reason
         req.finish_time = now
         del self.running[(req.tier, req.slot)]
+        if self.draft is not None:
+            self.draft.release(req.tier, req.slot)
         self.pools[req.tier].free(req.slot)
         req.slot = None
         self._retry.clear(req.id)

@@ -137,7 +137,17 @@ class SLOPolicy:
         in the system: outstanding decode tokens amortize over the total
         slot width; outstanding prefill tokens serialize one chunk per
         round on top (the scheduler's interleaving policy).  Monotone in
-        backlog — the property admission control keys on."""
+        backlog — the property admission control keys on.
+
+        With speculative decoding active (DESIGN.md §17) the decode
+        backlog drains in draft/verify rounds instead of single steps:
+        each round costs K draft steps at the draft tier's KV bytes plus
+        one verify priced as a plain target step — the optimistic bound
+        where the K+1-wide verify compute rides the same weight/KV
+        stream (idle-headroom regime; see spec_round_latency) — and
+        delivers E = (1 - a^(K+1)) / (1 - a) tokens per row at the
+        controller's acceptance EMA — so admission prices speculative
+        throughput instead of assuming one token per dispatch."""
         engine = sched.engine
         pool = sched.pool
         n_slots = sum(p.n_slots for p in sched.pools.values())
@@ -158,8 +168,22 @@ class SLOPolicy:
         t_tok = self._model_step_s(engine, n_slots, context,
                                    pool.bytes_per_token)
         C = engine.scfg.prefill_chunk
-        rounds = dec_toks / max(n_slots, 1) + pre_toks / C
-        est = rounds * t_tok
+        planner = getattr(sched, "spec_planner", None)
+        if planner is not None and planner.active:
+            draft = getattr(sched, "draft", None)
+            dpool = draft.pools.get(sched.default_tier) \
+                if draft is not None else None
+            draft_bpt = dpool.bytes_per_token if dpool is not None \
+                else pool.bytes_per_token
+            t_draft = self._model_step_s(engine, n_slots, context,
+                                         draft_bpt)
+            t_round = planner.k * t_draft + t_tok
+            e_tokens = max(planner.expected_tokens_per_round(), 1.0)
+            est = (dec_toks / max(n_slots, 1)) / e_tokens * t_round \
+                + (pre_toks / C) * t_tok
+        else:
+            rounds = dec_toks / max(n_slots, 1) + pre_toks / C
+            est = rounds * t_tok
         self.last_estimate_s = est
         return est
 

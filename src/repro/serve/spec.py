@@ -1,0 +1,412 @@
+"""Speculative decoding with low-precision drafts (DESIGN.md §17).
+
+XtraMAC's thesis — runtime datatype switching as a *speed* mechanism, not
+only a memory one — applied at the serving layer (ROADMAP item 3): drive
+K draft tokens through the SAME weights under an aggressive low-precision
+policy (the draft engine's KV tier, e.g. int8, plus whatever packed
+weight schemes the checkpoint carries), then verify the whole window in
+ONE target-precision dispatch and accept the longest agreeing prefix.
+Two dispatches replace up to K+1 — the precision ladder PR 5 built
+becomes wall-clock speedup whenever the cheap model agrees with the
+expensive one.
+
+**The acceptance contract** (the §11/§15/§16 bit-identity contract,
+extended): every emitted token is bit-identical to non-speculative
+decode — greedy AND seeded temperature, slab AND paged pools,
+single-device AND dp x tp.  The mechanism is *exact-match* acceptance:
+
+  * The draft proposes d_1..d_K by sampling ITS OWN logits with the
+    request's REAL per-(id, n_generated) key schedule (request.py) — for
+    temperature rows this maximizes agreement, because categorical
+    sampling with a shared key is a shared Gumbel draw: nearby logits
+    give the same argmax.
+  * The verify dispatch feeds [last_token, d_1..d_K] (S = K+1 positions)
+    at each row's committed length and samples the target's own token
+    g_j at every position j with key(n_generated + j), through the one
+    ``sample_rows`` rule.
+  * The host emits g_0..g_m where m is the longest prefix with
+    g_{j-1} == d_j.  Every emitted g_j was sampled by the TARGET model
+    from a context of previously-emitted tokens (all prior d's matched),
+    with the exact key a plain decode step would have used — so accepted
+    output equals non-speculative output *by construction*, at ANY
+    acceptance rate.  Full rejection still emits g_0 (exactly the plain
+    decode step's token): a speculative round never stalls and never
+    wastes the verify.
+
+**Rollback invariant**: the verify writes S positions of target KV, but
+the host commits ``lengths[slot] += n_emit`` only.  Positions
+L..L+n_emit-1 hold inputs [last, g_0..g_{n_emit-2}] — exactly the
+committed state of a never-drafted run (d_j == g_{j-1} on the accepted
+prefix) — and positions beyond are garbage-but-uncommitted: masked by
+``kv_valid_len`` at every later attend and overwritten before the slot's
+next real write lands there, the same argument that already covers
+inactive-slot and frozen-burst-row writes (§11).  Rollback is therefore
+length-only, for slab and paged pools alike (the paged write window is
+pinned via ``ensure_decode(slots, K+1, rems)`` — uncommitted overshoot
+flows to garbage/unpinned pages exactly like burst overshoot).
+
+**Draft KV state**: the draft engine keeps one slab pool per target
+tier, slot ids mirrored.  The draft burst writes draft-KV for inputs
+[last, d_1..d_{K-1}]; on the accepted prefix those EQUAL the committed
+tokens, so after syncing ``draft.lengths = target.lengths`` the draft is
+rolled back and caught up in one assignment.  Only two cases leave a
+deficit the next round must catch up (``_catch_up``): a fully-accepted
+round (the bonus token's input position was never drafted) and plain /
+prefill activity while the draft sat idle — both are closed by replaying
+the committed token suffix through the draft's prefill-chunk path
+(``need_logits=False``: KV only, no host sync).
+
+**K-controller** (``SpecPlanner``): a rolling acceptance EMA walks K up
+and down a power-of-two ladder; when acceptance collapses at K=1 the
+planner falls back to PLAIN bursts for an exponentially-growing cooldown
+(probe rounds re-test speculation, backoff bounds their cost) — so a
+workload the draft cannot predict degrades to the §11 burst path instead
+of paying 2x dispatches per token.  Speculation runs only when no
+request is WAITING and no prefill is mid-flight — the same conditions
+under which the scheduler plans K > 1 bursts, so admission latency and
+chunk interleaving are untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.quant.policy import PrecisionPolicy, validate_kv_tier
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs (``Scheduler(engine, spec=...)``).
+
+    ``draft_kv``: the draft engine's aggressive KV tier — the runtime
+    datatype switch that makes drafting cheap (weights are shared with
+    the target, so the checkpoint's packed schemes ride along).
+    ``draft_policy`` overrides the whole draft ``PrecisionPolicy``
+    instead (mutually exclusive with draft_kv).
+    ``k_max``: draft-length ceiling (power-of-two ladder, like
+    ``max_burst``).  ``k_init``: the ladder rung speculation starts at.
+    ``accept_floor``: EMA acceptance below this at K=1 collapses to
+    plain bursts; ``accept_raise``: EMA above this doubles K.
+    ``ema_alpha``: acceptance EMA weight on the newest round.
+    ``cooldown_rounds`` / ``cooldown_backoff``: plain-burst rounds after
+    a collapse, growing by the backoff factor each consecutive collapse.
+    ``max_collapses``: consecutive collapses (probe rounds that failed
+    straight back into cooldown, with no healthy round between) after
+    which speculation switches off for good — a workload the draft can
+    NEVER predict pays O(1) total probe cost instead of a constant
+    fraction (each probe's draft-KV catch-up costs ~cooldown/C chunks,
+    so probing forever costs ~1/C of all dispatches forever).
+    ``corrupt_drafts``: adversarial test/bench harness — garbles every
+    draft token so acceptance is exactly 0 (like the fault injector, a
+    seeded way to exercise the fallback path; accepted output must STILL
+    be bit-identical, because correctness never depends on the draft).
+    """
+    draft_kv: str = "int8"
+    draft_policy: Optional[PrecisionPolicy] = None
+    k_max: int = 4
+    k_init: int = 2
+    accept_floor: float = 0.2
+    accept_raise: float = 0.8
+    ema_alpha: float = 0.5
+    cooldown_rounds: int = 4
+    cooldown_backoff: int = 2
+    max_cooldown_rounds: int = 64
+    max_collapses: int = 3
+    corrupt_drafts: bool = False
+
+    def __post_init__(self):
+        if self.draft_policy is None:
+            validate_kv_tier(self.draft_kv)
+        if self.k_max < 1 or self.k_init < 1 or self.k_init > self.k_max:
+            raise ValueError(
+                f"need 1 <= k_init <= k_max, got k_init={self.k_init} "
+                f"k_max={self.k_max}")
+        if not 0.0 <= self.accept_floor <= self.accept_raise <= 1.0:
+            raise ValueError("need 0 <= accept_floor <= accept_raise <= 1")
+
+
+class DraftEngine:
+    """The target engine's cheap twin: SAME weights, aggressive policy.
+
+    Wraps a second ``ServingEngine`` over the target's parameter tree
+    with the draft ``PrecisionPolicy`` (default: the target policy at
+    the aggressive KV tier) — sharing params means zero extra weight
+    memory and, under a mesh, the already-placed sharded arrays.  Keeps
+    one slab draft pool per target tier with mirrored slot ids and
+    tracks each slot's committed draft length (``-1`` = stale: the slot
+    was freed/preempted or never drafted; re-entry replays the committed
+    tokens through the draft prefill path).
+    """
+
+    def __init__(self, engine, cfg: SpecConfig):
+        from .engine import ServeConfig, ServingEngine
+        self.cfg = cfg
+        self.target = engine
+        policy = cfg.draft_policy
+        if policy is None:
+            policy = dataclasses.replace(engine.policy,
+                                         kv=validate_kv_tier(cfg.draft_kv))
+        scfg = dataclasses.replace(
+            engine.scfg, policy=policy, kv_dtype=None,
+            # draft pools are always slabs: their state is disposable
+            # (length-synced to the target every round) and never shared,
+            # so paging buys nothing and rollback stays a pure length
+            # assignment
+            paged=False, cache_budget_bytes=None,
+            # draft dispatches are fenced by the SCHEDULER's fault
+            # handling via the target engine's injector; a second armed
+            # injector would double-count dispatch seq numbers
+            fault_injector=None)
+        # one inner engine per (target engine, draft policy): jitted
+        # draft closures live on the ServingEngine, so sharing it across
+        # DraftEngine instances (warmup scheduler, timed scheduler,
+        # corrupt/clean variants) reuses every compile.  Pool state stays
+        # per-DraftEngine — only the stateless compute twin is cached.
+        cache = engine.__dict__.setdefault("_draft_engine_cache", {})
+        key = policy.to_json()
+        inner = cache.get(key)
+        if inner is None:
+            inner = ServingEngine(engine.cfg, engine.params, scfg)
+            cache[key] = inner
+        self.engine = inner
+        self.pools: Dict[str, object] = {}          # target tier -> pool
+        self.draft_len: Dict[str, np.ndarray] = {}  # target tier -> [n_slots]
+
+    def pool_for(self, tier: str, target_pool):
+        """The draft pool mirroring ``target_pool`` (built lazily)."""
+        pool = self.pools.get(tier)
+        if pool is None:
+            pool = self.engine.new_pool(n_slots=target_pool.n_slots,
+                                        max_len=target_pool.max_len)
+            self.pools[tier] = pool
+            self.draft_len[tier] = np.full((target_pool.n_slots,), -1,
+                                           np.int64)
+        return pool
+
+    def release(self, tier: str, slot: int) -> None:
+        """Target slot freed (retire / preempt / fault): the mirrored
+        draft state is stale.  O(1) — the next request in this slot
+        catches up from its own committed tokens."""
+        lens = self.draft_len.get(tier)
+        if lens is not None:
+            lens[slot] = -1
+
+    def catch_up(self, tier: str, target_pool, rows: List[Tuple]) -> int:
+        """Bring each (request, slot) row's draft KV up to the target's
+        committed length by replaying the committed token suffix
+        (prompt + outputs[:-1]) through the draft prefill-chunk path —
+        KV only (``need_logits=False``), so no logits and no host sync.
+        Chunks re-start at the aligned offset below the deficit;
+        rewriting already-correct positions recomputes identical bytes
+        (deterministic forward over an identical prefix).  Returns the
+        number of draft prefill dispatches issued."""
+        pool = self.pool_for(tier, target_pool)
+        lens = self.draft_len[tier]
+        C = self.engine.scfg.prefill_chunk
+        dispatches = 0
+        for req, slot in rows:
+            want = int(target_pool.lengths[slot])
+            have = int(lens[slot])
+            if have >= want:
+                pool.lengths[slot] = want
+                lens[slot] = want
+                continue
+            committed = np.concatenate(
+                [req.prompt, np.asarray(req.output_tokens[:-1], np.int32)]) \
+                if req.n_generated > 1 else req.prompt
+            assert committed.size == want, (committed.size, want)
+            padded, n = self.engine.pad_prompt(committed)
+            start = max(0, have) // C * C
+            pool.lengths[slot] = start
+            for off in range(start, n, C):
+                self.engine.prefill_chunk_into_slot(
+                    pool, slot, padded, off, prompt_len=n,
+                    need_logits=False)
+                dispatches += 1
+            lens[slot] = want
+        return dispatches
+
+    def draft_burst(self, tier: str, target_pool, rows: List[Tuple],
+                    k: int, key_schedule: np.ndarray,
+                    temps: np.ndarray) -> np.ndarray:
+        """K draft steps on the draft pool — PR 4's ``lax.scan`` burst,
+        unchanged, at the aggressive tier.  ``key_schedule`` [K, n, 2]
+        carries each row's REAL step keys for tokens
+        n_generated..n_generated+K-1 (the same keys verify position
+        j < K uses), which is what makes temperature-row drafts line up
+        with the target's Gumbel draws.  EOS is disabled (-1) — the
+        draft never freezes; real EOS is enforced on the accepted
+        tokens.  Returns the proposals d_1..d_K as [K, n_slots] int32
+        (inactive slots carry garbage the caller ignores)."""
+        pool = self.pool_for(tier, target_pool)
+        n = pool.n_slots
+        tokens = np.zeros((n,), np.int32)
+        active = np.zeros((n,), bool)
+        rem = np.zeros((n,), np.int32)
+        eos = np.full((n,), -1, np.int32)
+        for req, slot in rows:
+            tokens[slot] = req.last_token
+            active[slot] = True
+            rem[slot] = k
+        toks, valid = self.engine.decode_burst(
+            pool, tokens, key_schedule, temps, active, rem, eos)
+        if self.cfg.corrupt_drafts:
+            # adversarial collapse harness: guarantee 0 acceptance while
+            # staying in-vocab (the contract says output is STILL
+            # bit-identical — the verify's own samples carry the round)
+            toks = (toks + 1) % self.target.cfg.vocab
+        return toks
+
+    def sync_lengths(self, tier: str, target_pool,
+                     rows: List[Tuple]) -> None:
+        """Post-round rollback/commit in one assignment: on the accepted
+        prefix the draft's written inputs EQUAL the committed tokens
+        (d_j == g_{j-1}), so draft state up to the target's new length
+        is already correct — and everything past it is garbage the next
+        write overwrites, exactly like the target's own rollback."""
+        pool = self.pools[tier]
+        lens = self.draft_len[tier]
+        for req, slot in rows:
+            want = int(target_pool.lengths[slot])
+            # a fully-accepted round emits K+1 tokens but drafts only K
+            # input positions — the deficit (at most 1 here) is closed by
+            # next round's catch_up
+            got = min(int(pool.lengths[slot]), want)
+            pool.lengths[slot] = got
+            lens[slot] = got
+
+
+class SpecPlanner:
+    """Rolling-acceptance K controller + plain-burst fallback.
+
+    State machine per scheduler: an acceptance-rate EMA drives K along
+    the power-of-two ladder [1, k_max]; a collapse at K=1 (EMA below
+    ``accept_floor``) switches to plain bursts for ``cooldown`` rounds,
+    with the cooldown growing by ``cooldown_backoff`` on every
+    consecutive collapsed probe (and resetting on a healthy round).
+    Probes re-enter at K=1 — the cheapest round that still measures the
+    workload — and after ``max_collapses`` consecutive failed probes
+    speculation switches off permanently, so a draft-hostile workload
+    pays O(1) total probe cost and dispatches-per-token converges to the
+    plain-burst rate exactly."""
+
+    def __init__(self, cfg: SpecConfig):
+        self.cfg = cfg
+        self.k = cfg.k_init
+        self.ema: Optional[float] = None     # None until the first round
+        self.cooldown = 0                    # plain rounds left
+        self.off = False                     # permanent fallback
+        self._next_cooldown = cfg.cooldown_rounds
+        self._consecutive_collapses = 0
+        self.n_spec_rounds = 0
+        self.n_plain_fallbacks = 0
+        self.n_collapses = 0
+
+    @property
+    def active(self) -> bool:
+        """Whether the next eligible round would speculate."""
+        return not self.off and self.cooldown == 0
+
+    def plan(self, rows, pool) -> int:
+        """Draft length K for this round, or 0 = run the plain path.
+        Caps mirror ``_plan_burst``: each row's verify window must fit
+        its slot (lengths + K + 1 <= max_len) and its budget must cover
+        more than one token (a 1-token budget gains nothing over a plain
+        step), and K rounds down to a power of two so at most
+        log2(k_max) verify widths ever compile."""
+        if self.off:
+            self.n_plain_fallbacks += 1
+            return 0
+        if self.cooldown > 0:
+            self.cooldown -= 1
+            self.n_plain_fallbacks += 1
+            return 0
+        k = self.k
+        for req, slot in rows:
+            budget = req.sampling.max_new_tokens - req.n_generated
+            if budget < 2:
+                return 0
+            capacity = pool.max_len - int(pool.lengths[slot]) - 1
+            k = min(k, budget - 1, capacity)
+        if k < 1:
+            return 0
+        return 1 << (k.bit_length() - 1)
+
+    def expected_tokens_per_round(self) -> float:
+        """E[emitted per row per spec round] under the current EMA and K
+        (geometric acceptance): sum_{j=0..K} a^j = (1 - a^{K+1})/(1 - a).
+        Feeds the SLO drain estimate so admission prices speculative
+        throughput honestly."""
+        a = min(max(self.ema if self.ema is not None else 0.5, 0.0), 0.999)
+        return float((1.0 - a ** (self.k + 1)) / (1.0 - a))
+
+    def observe(self, drafted: int, accepted: int) -> None:
+        """Fold one spec round's outcome into the controller."""
+        self.n_spec_rounds += 1
+        rate = accepted / drafted if drafted else 0.0
+        self.ema = rate if self.ema is None else (
+            self.cfg.ema_alpha * rate
+            + (1.0 - self.cfg.ema_alpha) * self.ema)
+        if rate >= self.cfg.accept_floor:
+            # any decent round (probe or steady-state) clears the
+            # consecutive-collapse streak: the workload is predictable
+            # again, so future collapses restart the backoff ladder
+            self._consecutive_collapses = 0
+        if self.ema >= self.cfg.accept_raise:
+            self.k = min(self.k * 2, self.cfg.k_max)
+            self._next_cooldown = self.cfg.cooldown_rounds
+        elif self.ema < self.cfg.accept_floor:
+            if self.k > 1:
+                self.k = max(1, self.k // 2)
+            else:
+                # collapsed at the bottom rung: fall back to plain
+                # bursts, backoff the next probe, reset the EMA so the
+                # probe round judges the workload fresh.  Probes restart
+                # at K=1 (one cheap draft step) and climb the ladder on
+                # success; too many consecutive failed probes switch
+                # speculation off for good.
+                self.n_collapses += 1
+                self._consecutive_collapses += 1
+                if self._consecutive_collapses >= self.cfg.max_collapses:
+                    self.off = True
+                self.cooldown = self._next_cooldown
+                self._next_cooldown = min(
+                    self._next_cooldown * self.cfg.cooldown_backoff,
+                    self.cfg.max_cooldown_rounds)
+                self.ema = None
+                self.k = 1
+
+    def snapshot(self) -> Dict:
+        return {"k": self.k,
+                "acceptance_ema": None if self.ema is None
+                else round(self.ema, 4),
+                "cooldown": self.cooldown,
+                "off": self.off,
+                "spec_rounds": self.n_spec_rounds,
+                "plain_fallbacks": self.n_plain_fallbacks,
+                "collapses": self.n_collapses}
+
+
+def accept_longest_prefix(draft: np.ndarray, verified: np.ndarray,
+                          eos_id: int, rem: int) -> Tuple[int, int]:
+    """Host-side acceptance for ONE row: ``draft`` [K] proposals d_1..d_K,
+    ``verified`` [K+1] target samples g_0..g_K.  Returns (n_emit,
+    n_accepted): emit g_0..g_{n_emit-1} where the window runs through the
+    longest prefix with g_{j-1} == d_j plus the bonus/correction sample,
+    truncated at the first emitted EOS and the row's remaining budget.
+    n_accepted counts the emitted tokens that were draft matches — the
+    speculation-win numerator (n_emit - n_accepted is 0 or 1: the bonus)."""
+    k = int(draft.shape[0])
+    m = 0
+    while m < k and int(verified[m]) == int(draft[m]):
+        m += 1
+    n_emit = min(m + 1, rem)
+    if eos_id >= 0:
+        for j in range(n_emit):
+            if int(verified[j]) == eos_id:
+                n_emit = j + 1
+                break
+    n_accepted = min(m, n_emit)
+    return n_emit, n_accepted

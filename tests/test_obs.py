@@ -421,6 +421,9 @@ REPORT_KEYS = {
     "slot_occupancy_mean", "decode_dispatches", "decode_token_steps",
     "decode_tokens_emitted", "decode_dispatches_per_step",
     "decode_dispatches_per_token", "burst_hist", "itl_granularity",
+    # spec-aware amortization across both decode paths (DESIGN.md §17);
+    # equals decode_dispatches_per_token when speculation is off
+    "dispatches_per_token",
     "ttft_mean_s", "ttft_p50_s", "ttft_p95_s",
     "itl_mean_s", "itl_p50_s", "itl_p95_s",
     "e2e_latency_mean_s", "e2e_latency_p50_s", "e2e_latency_p95_s",

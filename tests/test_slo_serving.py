@@ -181,6 +181,10 @@ def test_ttft_deadline_sheds_waiting(setup):
     engine = _engine(setup, n_slots=1)
     s = Scheduler(engine, clock=lambda: t[0])
     s.submit(Request(_prompts(cfg, [8])[0], _sp(max_new=16), id=0))
+    # Seat id 0 in the single slot before the deadline request arrives:
+    # EDF admission would otherwise run the deadline-carrying request
+    # first (finite key beats inf), and it would meet its deadline.
+    s.step()
     s.submit(Request(_prompts(cfg, [8], 1)[0], _sp(max_new=4), id=1,
                      ttft_deadline_s=0.5))
     for _ in range(3):
